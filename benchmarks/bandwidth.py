@@ -1,0 +1,55 @@
+"""Fig 3c — bandwidth tests (paper §3).
+
+Reproduces: every transaction class except GPU-outbound saturates the
+APEnet+ link limit (~2.2 GB/s on current hardware); GPU memory *read*
+transactions bottleneck inside the GPU (~1.4 GB/s plateau).
+"""
+from __future__ import annotations
+
+from repro.core.apelink import NetModel, sustained_bandwidth
+
+
+def run() -> list[dict]:
+    net = NetModel()
+    rows = [{"bench": "bandwidth", "metric": "link_limit_GBps",
+             "value": sustained_bandwidth() / 1e9,
+             "note": "paper ~2.2 GB/s plateau"}]
+    big = 4 << 20
+    cases = {
+        "cpu_write": dict(src_gpu=False, dst_gpu=False),   # CPU mem read->TX
+        "gpu_write": dict(src_gpu=False, dst_gpu=True),    # RX into GPU mem
+        "cpu_read": dict(src_gpu=False, dst_gpu=False),
+        "gpu_read": dict(src_gpu=True, dst_gpu=False),     # GPU-outbound
+    }
+    for name, kw in cases.items():
+        bw = net.bandwidth(big, **kw)
+        rows.append({"bench": "bandwidth", "metric": f"{name}_GBps",
+                     "value": bw / 1e9,
+                     "note": "GPU-outbound read-capped" if name == "gpu_read"
+                     else "saturates link"})
+    # curve points (Fig 3c x-axis)
+    for lg in (12, 14, 16, 18, 20, 22):
+        n = 1 << lg
+        rows.append({"bench": "bandwidth",
+                     "metric": f"gg_p2p_bw_{n>>10}KiB_GBps",
+                     "value": net.bandwidth(n, src_gpu=False, dst_gpu=True)
+                     / 1e9, "note": ""})
+    return rows
+
+
+def check(rows) -> list[str]:
+    errs = []
+    vals = {r["metric"]: r["value"] for r in rows}
+    if not 2.0 <= vals["link_limit_GBps"] <= 2.4:
+        errs.append(f"link limit {vals['link_limit_GBps']:.2f} not ~2.2")
+    for k in ("cpu_write_GBps", "gpu_write_GBps", "cpu_read_GBps"):
+        if vals[k] < 0.85 * vals["link_limit_GBps"]:
+            errs.append(f"{k}={vals[k]:.2f} does not saturate link")
+    if not 1.2 <= vals["gpu_read_GBps"] <= 1.6:
+        errs.append(f"gpu_read {vals['gpu_read_GBps']:.2f} not ~1.4")
+    return errs
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['bench']},{r['metric']},{r['value']}")

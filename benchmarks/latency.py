@@ -1,0 +1,86 @@
+"""Fig 3a/3b — round-trip latency and GPU-GPU latency vs InfiniBand.
+
+Reproduces the paper's headline latency numbers from the calibrated
+NetModel:
+
+  * GPU-to-GPU one-way latency with P2P:        ~8.2 us
+  * same without P2P (host staging):            ~16.8 us
+  * InfiniBand + MVAPICH on the same platform:  ~17.4 us
+  * GPU involvement costs ~30% extra round-trip latency at small sizes
+  * P2P advantage over IB holds up to ~128 KB (Fig 3b crossover)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.apelink import NetModel
+
+
+def run() -> list[dict]:
+    net = NetModel()
+    rows = []
+    small = 32  # bytes: the small-message latency plateau
+
+    l_p2p = net.latency(small, src_gpu=True, dst_gpu=True, p2p=True)
+    l_staged = net.latency(small, src_gpu=True, dst_gpu=True, p2p=False)
+    l_ib = net.latency(small, fabric="ib")
+    l_hh = net.latency(small)
+    rows += [
+        {"bench": "latency", "metric": "gpu_gpu_p2p_us", "value": l_p2p * 1e6,
+         "note": "paper ~8.2"},
+        {"bench": "latency", "metric": "gpu_gpu_staged_us",
+         "value": l_staged * 1e6, "note": "paper ~16.8"},
+        {"bench": "latency", "metric": "gpu_gpu_ib_us", "value": l_ib * 1e6,
+         "note": "paper ~17.4"},
+        {"bench": "latency", "metric": "host_host_us", "value": l_hh * 1e6,
+         "note": "host-bound baseline"},
+    ]
+    # Fig 3a: round-trip for all endpoint combinations
+    for name, (sg, dg) in {"HH": (False, False), "GH": (True, False),
+                           "HG": (False, True), "GG": (True, True)}.items():
+        rt = net.roundtrip(small, src_gpu=sg, dst_gpu=dg)
+        rows.append({"bench": "latency", "metric": f"roundtrip_{name}_us",
+                     "value": rt * 1e6, "note": ""})
+    gg = next(r["value"] for r in rows if r["metric"] == "roundtrip_GG_us")
+    hh = next(r["value"] for r in rows if r["metric"] == "roundtrip_HH_us")
+    rows.append({"bench": "latency", "metric": "gpu_latency_penalty",
+                 "value": gg / hh - 1.0, "note": "paper ~30% (one endpoint "
+                 "~15%, both ~30%)"})
+    # Fig 3b: APEnet+ P2P vs IB crossover
+    crossover = None
+    for nbytes in 2 ** np.arange(5, 22):
+        a = net.latency(int(nbytes), src_gpu=True, dst_gpu=True, p2p=True)
+        b = net.latency(int(nbytes), fabric="ib")
+        if a > b and crossover is None:
+            crossover = int(nbytes)
+        if nbytes in (1024, 16384, 131072, 1 << 20):
+            rows.append({"bench": "latency",
+                         "metric": f"p2p_vs_ib_at_{int(nbytes)>>10}KiB",
+                         "value": b / a,
+                         "note": ">1 means APEnet+ P2P wins"})
+    rows.append({"bench": "latency", "metric": "p2p_ib_crossover_KiB",
+                 "value": (crossover or 0) / 1024,
+                 "note": "paper: P2P wins up to ~128 KB"})
+    return rows
+
+
+def check(rows) -> list[str]:
+    errs = []
+    vals = {r["metric"]: r["value"] for r in rows}
+    for key, want, tol in (("gpu_gpu_p2p_us", 8.2, 0.6),
+                           ("gpu_gpu_staged_us", 16.8, 1.2),
+                           ("gpu_gpu_ib_us", 17.4, 1.0)):
+        if abs(vals[key] - want) > tol:
+            errs.append(f"{key}={vals[key]:.1f} vs paper {want}")
+    if not 0.2 <= vals["gpu_latency_penalty"] <= 0.4:
+        errs.append(f"GPU latency penalty {vals['gpu_latency_penalty']:.2f} "
+                    "not ~0.3")
+    if not 64 <= vals["p2p_ib_crossover_KiB"] <= 512:
+        errs.append(f"crossover {vals['p2p_ib_crossover_KiB']:.0f} KiB not "
+                    "~128 KiB")
+    return errs
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['bench']},{r['metric']},{r['value']}")

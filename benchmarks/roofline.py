@@ -1,0 +1,118 @@
+"""Roofline reader: aggregates launch/dryrun JSON cells into the
+EXPERIMENTS.md tables.
+
+Three-term roofline per (arch x shape x mesh):
+
+  compute_s    = per-device HLO FLOPs / peak bf16 FLOP/s
+  memory_s     = per-device HLO bytes accessed / HBM bandwidth
+  collective_s = per-device link traffic (parsed from partitioned HLO,
+                 ring-schedule multipliers) / one ICI link direction
+
+Per-device quantities x chips = the assignment's global formulation; the
+two are identical after the chips cancel.  "fraction" is the useful-compute
+roofline fraction: model_flops / (peak x dominant-term).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core import hw
+
+OUT = Path(__file__).resolve().parent / "out" / "dryrun"
+CHIP = hw.TPU_V5E
+
+
+def load_cells(variant: str | None = None, mesh: str | None = None):
+    cells = []
+    for p in sorted(OUT.glob("*.json")):
+        d = json.loads(p.read_text())
+        if variant is not None and d.get("variant", "baseline") != variant:
+            continue
+        if mesh is not None and d["mesh"] != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def cell_row(d: dict) -> dict:
+    r = d["roofline"]
+    dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    step_s = max(dom, 1e-30)
+    # roofline fraction: useful model FLOPs (params + causal attention) at
+    # peak vs modelled step time
+    useful = (d["model_flops_per_device"]
+              + d.get("attn_model_flops_per_device", 0.0))
+    ideal_s = useful / CHIP.peak_flops_bf16
+    mem = d.get("memory_analysis", {})
+    return {
+        "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+        "variant": d.get("variant", "baseline"),
+        "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+        "collective_s": r["collective_s"],
+        "bottleneck": r["bottleneck"].replace("_s", ""),
+        "roofline_fraction": ideal_s / step_s,
+        "useful_flop_ratio": d.get("useful_flop_ratio_attn")
+        or d.get("useful_flop_ratio") or 0.0,
+        "live_GiB": (mem.get("live_bytes_per_device") or 0) / 2**30,
+        "fits_hbm": mem.get("fits_hbm"),
+        "link_GB": d["link_bytes_per_device"] / 1e9,
+    }
+
+
+def table(cells) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bottleneck | roofline frac | useful/HLO | live GiB |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for d in cells:
+        c = cell_row(d)
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {c['compute_s']:.3e} | {c['memory_s']:.3e} "
+            f"| {c['collective_s']:.3e} | {c['bottleneck']} "
+            f"| {c['roofline_fraction']:.3f} | {c['useful_flop_ratio']:.2f} "
+            f"| {c['live_GiB']:.2f} |")
+    return "\n".join(lines)
+
+
+def run() -> list[dict]:
+    rows = []
+    cells = load_cells(variant="baseline")
+    if not cells:
+        return [{"bench": "roofline", "metric": "cells", "value": 0,
+                 "note": "run repro.launch.dryrun first"}]
+    rows.append({"bench": "roofline", "metric": "cells",
+                 "value": len(cells), "note": "baseline (arch,shape,mesh)"})
+    fracs = [cell_row(d)["roofline_fraction"] for d in cells]
+    rows.append({"bench": "roofline", "metric": "median_fraction",
+                 "value": sorted(fracs)[len(fracs) // 2], "note": ""})
+    worst = min(cells, key=lambda d: cell_row(d)["roofline_fraction"])
+    best = max(cells, key=lambda d: cell_row(d)["roofline_fraction"])
+    for tag, d in (("worst", worst), ("best", best)):
+        c = cell_row(d)
+        rows.append({"bench": "roofline", "metric": f"{tag}_fraction",
+                     "value": c["roofline_fraction"],
+                     "note": f"{c['arch']} x {c['shape']} x {c['mesh']} "
+                     f"({c['bottleneck']}-bound)"})
+    n_bound = {}
+    for d in cells:
+        b = cell_row(d)["bottleneck"]
+        n_bound[b] = n_bound.get(b, 0) + 1
+    for b, n in sorted(n_bound.items()):
+        rows.append({"bench": "roofline", "metric": f"n_{b}_bound",
+                     "value": n, "note": ""})
+    return rows
+
+
+def check(rows) -> list[str]:
+    vals = {r["metric"]: r["value"] for r in rows}
+    if vals.get("cells", 0) == 0:
+        return ["no dry-run cells found (run repro.launch.dryrun)"]
+    return []
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else None
+    print(table(load_cells(variant="baseline", mesh=mesh)))

@@ -1,0 +1,55 @@
+"""Benchmark driver — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all benches, CSV
+  PYTHONPATH=src python -m benchmarks.run latency    # one bench
+
+Each module exposes ``run() -> [rows]`` and ``check(rows) -> [errors]``;
+check() validates the paper's quantitative claims against our model and the
+exit code reflects any violation — this is the reproduction gate.
+"""
+from __future__ import annotations
+
+import csv
+import importlib
+import io
+import sys
+import time
+
+MODULES = ["apelink_eff", "dma_overlap", "tlb", "latency", "bandwidth",
+           "lofamo", "nextgen", "roofline"]
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    names = argv or MODULES
+    all_rows, all_errs = [], []
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.perf_counter()
+        rows = mod.run()
+        dt = time.perf_counter() - t0
+        errs = mod.check(rows) if hasattr(mod, "check") else []
+        all_rows += rows
+        all_errs += [f"{name}: {e}" for e in errs]
+        status = "OK " if not errs else "FAIL"
+        print(f"[{status}] {name:<12s} {len(rows):3d} rows  {dt:6.2f}s",
+              flush=True)
+
+    buf = io.StringIO()
+    w = csv.writer(buf)
+    w.writerow(["bench", "metric", "value", "note"])
+    for r in all_rows:
+        w.writerow([r["bench"], r["metric"], r["value"], r.get("note", "")])
+    print()
+    print(buf.getvalue())
+    if all_errs:
+        print("PAPER-CLAIM CHECK FAILURES:", file=sys.stderr)
+        for e in all_errs:
+            print("  ", e, file=sys.stderr)
+        return 1
+    print(f"all paper-claim checks passed ({len(all_rows)} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""Fig 2 — hardware TLB on the receive path (paper §2.2).
+
+The paper: moving virtual->physical translation from the Nios II soft-CPU
+into an on-FPGA TLB gained up to 60% receive bandwidth on synthetic
+benchmarks.  We reproduce the gain from the Tlb cost model (cold walk vs hot
+TLB) and report the hit-rate sweep, plus the TLB behaviour under a paged-KV
+serving access pattern (the TPU-side analogue of registration caching).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import hw
+from repro.core.apelink import sustained_bandwidth
+from repro.core.tlb import PAGE_BYTES, Tlb
+
+
+def run() -> list[dict]:
+    rows = []
+    wire = sustained_bandwidth()  # ~2.2 GB/s APElink payload bandwidth
+    tlb = Tlb(entries=512, ways=4)
+    msg = 128 * 1024  # synthetic receive benchmark: 128 KiB messages
+
+    bw_cold = tlb.receive_bandwidth(msg, wire, hit_rate=0.0)
+    bw_hot = tlb.receive_bandwidth(msg, wire, hit_rate=1.0)
+    rows.append({"bench": "tlb", "metric": "rx_bw_nios_MBps",
+                 "value": bw_cold / 1e6, "note": "every page walked"})
+    rows.append({"bench": "tlb", "metric": "rx_bw_hwtlb_MBps",
+                 "value": bw_hot / 1e6, "note": "every page hits"})
+    rows.append({"bench": "tlb", "metric": "bw_gain",
+                 "value": bw_hot / bw_cold - 1.0,
+                 "note": "paper: up to 60%"})
+    for hr in (0.0, 0.25, 0.5, 0.75, 0.9, 1.0):
+        bw = tlb.receive_bandwidth(msg, wire, hit_rate=hr)
+        rows.append({"bench": "tlb", "metric": f"rx_bw_hit{int(hr*100)}_MBps",
+                     "value": bw / 1e6, "note": ""})
+
+    # measured hit rate under a paged-KV-style pattern: 32 sequences each
+    # re-touching their pages every decode step
+    tlb2 = Tlb(entries=512, ways=4)
+    rng = np.random.default_rng(0)
+    starts = rng.integers(0, 1 << 20, size=32) * PAGE_BYTES
+    for step in range(64):
+        for s in starts:
+            npages = 1 + step // 16
+            for p in range(npages):
+                tlb2.translate(int(s) + p * PAGE_BYTES)
+    rows.append({"bench": "tlb", "metric": "serving_hit_rate",
+                 "value": tlb2.stats.hit_rate,
+                 "note": "paged-KV decode pattern"})
+    rows.append({"bench": "tlb", "metric": "serving_rx_bw_MBps",
+                 "value": tlb2.receive_bandwidth(msg, wire) / 1e6,
+                 "note": "at measured hit rate"})
+    return rows
+
+
+def check(rows) -> list[str]:
+    errs = []
+    vals = {r["metric"]: r["value"] for r in rows}
+    if not 0.5 <= vals["bw_gain"] <= 0.7:
+        errs.append(f"TLB bandwidth gain {vals['bw_gain']:.2f} not ~0.6")
+    if vals["serving_hit_rate"] < 0.9:
+        errs.append(f"serving hit rate {vals['serving_hit_rate']:.2f} < 0.9")
+    return errs
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['bench']},{r['metric']},{r['value']}")

@@ -1,0 +1,61 @@
+"""Fault-tolerant data-parallel training over the torus fabric (paper §4).
+
+  PYTHONPATH=src python examples/fault_tolerant_train.py
+
+Runs the paper-faithful "apex" communication mode (explicit bidirectional
+ring reduce-scatter / all-gather over the torus, the dual-DMA double-
+buffering trick) on 8 forced host devices, then kills a node mid-run:
+LO|FA|MO's mutual watchdog detects it, diffuses the fault to neighbours,
+the master view flags the rank, and the trainer checkpoint-restarts on the
+surviving devices (elastic re-mesh 8 -> 4) replaying the data stream.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import tempfile  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.optim import AdamWConfig  # noqa: E402
+from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: E402
+
+
+def main() -> None:
+    cfg = configs.get_config("qwen2-0.5b").reduced()
+    mesh = make_mesh((8,), ("data",))
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tcfg = TrainerConfig(
+            ckpt_dir=ckpt_dir, ckpt_every=5, batch=8, seq_len=32,
+            opt=AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=40),
+            comm="apex", dp_axis="data", wd_period=0.5)
+        tr = Trainer(cfg, tcfg, mesh=mesh)
+        print(f"[fabric] torus dims={tr.torus.dims}, "
+              f"comm=apex (explicit torus ring collectives)")
+
+        def fault_hook(i):
+            if i == 6:
+                print("[fault]  killing node 5 (host+NIC) ...")
+                tr.lofamo.kill_node(5)
+
+        metrics = tr.train(14, fault_hook=fault_hook)
+        losses = [m["loss"] for m in metrics]
+        print(f"[train]  losses: {losses[0]:.3f} ... {losses[-1]:.3f}")
+        assert all(np.isfinite(x) for x in losses)
+        print("[events]")
+        for e in tr.events:
+            print("   ", e)
+        assert any("re-mesh" in e for e in tr.events), "re-mesh expected"
+        assert tr.mesh.devices.size == 4
+        # LO|FA|MO awareness-time model at this watchdog period
+        from repro.core.lofamo import awareness_time_model
+        print(f"[lofamo] Ta(WD=500ms) = {awareness_time_model(0.5):.2f} s "
+              "(paper: 0.9 s)")
+    print("fault-tolerant training OK (8 -> 4 devices, training continued)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.store import (CheckpointStore, latest_step,  # noqa: F401
+                                    load_checkpoint, save_checkpoint)

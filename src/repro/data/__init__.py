@@ -1,0 +1,2 @@
+from repro.data.pipeline import (Prefetcher, SyntheticTokens,  # noqa: F401
+                                 make_batch_arrays)

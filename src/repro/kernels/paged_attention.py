@@ -1,0 +1,112 @@
+"""Paged decode attention — the §2.2 hardware-TLB idea as a Pallas kernel.
+
+APEnet+ §2.2 moved virtual->physical address translation out of the Nios II
+soft-CPU into an FPGA TLB sitting directly in the RX datapath (+60% RX
+bandwidth).  The TPU-native analogue: during decode, the KV cache is *paged*
+(virtual per-sequence pages scattered over a physical page pool), and the
+translation happens **inside the kernel's BlockSpec index_map** via scalar
+prefetch — the DMA engine that streams K/V pages from HBM into VMEM is
+programmed directly with translated physical page indices, with no
+XLA-level gather materialising the sequence first.
+
+  * fast path (this kernel): translation in the index_map = "hardware TLB";
+  * slow path (kernels/ref.py::paged_attention): gather pages with XLA ops,
+    then dense attention = "Nios II software walk".
+
+benchmarks/tlb.py quantifies the byte-traffic gap between the two paths
+(the gather path writes the gathered copy back to HBM before attending).
+
+Grid: (B, H, max_pages), page axis innermost/sequential; online-softmax
+running stats in VMEM scratch; pages past a sequence's length are skipped
+(pl.when), so ragged batches pay only for resident pages.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(page_table_ref, seq_lens_ref,      # scalar-prefetch operands
+            q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *,
+            scale: float, page: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    npages = pl.num_programs(2)
+    seq_len = seq_lens_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # The page is resident iff it holds any position < seq_len.
+    @pl.when(j * page < seq_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (D,)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (page, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # (page, D)
+        s = jnp.einsum("d,pd->p", q, k)                      # (page,)
+        pos = j * page + jax.lax.iota(jnp.int32, page)
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[0] = alpha * l_ref[0] + p.sum()
+        m_ref[0] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jnp.einsum("p,pd->d", p, v)[None]
+
+    @pl.when(j == npages - 1)
+    def _flush():
+        denom = jnp.where(l_ref[0] == 0.0, 1.0, l_ref[0])
+        o_ref[0, 0, :] = (acc_ref[0] / denom).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_table: jax.Array, seq_lens: jax.Array, *,
+                    scale: float | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B,H,D); k_pages/v_pages: (P,page,Hkv,D);
+    page_table: (B,max_pages) int32; seq_lens: (B,) int32 -> (B,H,D)."""
+    B, H, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    max_pages = page_table.shape[1]
+    assert H % Hkv == 0
+    group = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    kernel = functools.partial(_kernel, scale=scale, page=page)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, j, pt, sl: (b, h, 0)),
+            # THE TLB: physical page id comes from the prefetched page table.
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, j, pt, sl: (pt[b, j], 0, h // group, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, j, pt, sl: (pt[b, j], 0, h // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, j, pt, sl: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(page_table, seq_lens, q, k_pages, v_pages)

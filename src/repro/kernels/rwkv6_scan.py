@@ -1,0 +1,78 @@
+"""RWKV6 (Finch) wkv recurrence Pallas kernel.
+
+S_t = diag(w_t) S_{t-1} + k_t (x) v_t ;   y_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t)
+
+w_t is a *data-dependent per-channel* decay (the paper-series' headline
+feature), so unlike Mamba2's scalar-decay SSD there is no cheap chunk-level
+closed form; the kernel walks the chunk with an in-register fori_loop and
+carries the (dh x dh) state across chunks in VMEM scratch (sequential
+innermost grid axis).  dh is the vector-lane dimension, so each step is a
+rank-1 update + matvec on the VPU; the chunk loop amortises the state
+load/store to once per L steps.
+
+Grid: (B, H, S/L).  Validated vs kernels/ref.py::rwkv6_scan in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_ref, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)   # (L, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)            # (dh,)
+
+    def step(t, carry):
+        s, y = carry
+        rt = jax.lax.dynamic_index_in_dim(r, t, 0, keepdims=False)
+        kt = jax.lax.dynamic_index_in_dim(k, t, 0, keepdims=False)
+        vt = jax.lax.dynamic_index_in_dim(v, t, 0, keepdims=False)
+        wt = jax.lax.dynamic_index_in_dim(w, t, 0, keepdims=False)
+        kv = kt[:, None] * vt[None, :]                     # (dh, dh)
+        yt = (rt[None, :] @ (s + u[:, None] * kv))[0]      # (dh,)
+        s = s * wt[:, None] + kv
+        y = jax.lax.dynamic_update_index_in_dim(y, yt, t, 0)
+        return s, y
+
+    s0 = s_ref[...]
+    y0 = jnp.zeros((chunk, r.shape[-1]), jnp.float32)
+    s_out, y = jax.lax.fori_loop(0, chunk, step, (s0, y0))
+    s_ref[...] = s_out
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, *, chunk: int = DEFAULT_CHUNK,
+               interpret: bool = False) -> jax.Array:
+    """r/k/v/w: (B,S,H,dh), u: (H,dh) -> (B,S,H,dh)."""
+    B, S, H, dh = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    grid = (B, H, S // chunk)
+
+    seq_spec = pl.BlockSpec((1, chunk, 1, dh), lambda b, h, c: (b, c, h, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, dh), lambda b, h, c: (h, 0))],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct(r.shape, r.dtype),
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,144 @@
+"""GQA attention with RoPE: train / prefill / decode paths.
+
+The jnp implementation (kernels/ref.py) is used under jit so GSPMD can
+shard it (heads over 'model', batch over 'data'/'pod'); the Pallas flash /
+paged kernels are the per-shard fast path wired up through
+kernels/ops.sharded_* in the serving engine.
+
+Decode uses a dense ring-buffer KV cache (B, S_max, Hkv, hd) updated with
+dynamic_update_slice at `pos`; attention masks positions >= pos+1.  The
+paged variant (serving engine) stores the cache as a page pool + table —
+the §2.2 TLB path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.models import common
+from repro.models.common import ArchCfg, apply_rope, dense_init
+
+
+def init_attn(cfg: ArchCfg, key, *, cross: bool = False):
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, (d, cfg.n_heads * hd), cfg.dtype),
+        "wk": dense_init(kk, (d, cfg.n_kv_heads * hd), cfg.dtype),
+        "wv": dense_init(kv, (d, cfg.n_kv_heads * hd), cfg.dtype),
+        "wo": dense_init(ko, (cfg.n_heads * hd, d), cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.dtype)
+    return p
+
+
+def _project_qkv(cfg: ArchCfg, p, xq, xkv):
+    hd = cfg.resolved_head_dim
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, Sq, cfg.n_heads, hd)
+    k = k.reshape(B, Skv, cfg.n_kv_heads, hd)
+    v = v.reshape(B, Skv, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _compute_dtype(cfg: ArchCfg):
+    return jnp.bfloat16 if cfg.attn_dtype == "bf16" else jnp.float32
+
+
+def attn_full(cfg: ArchCfg, p, x, *, freqs=None, causal=True,
+              positions=None):
+    """Full-sequence self-attention (training / encoder).
+
+    Returns (out, (k, v)) so prefill can persist the cache."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, x)
+    if freqs is not None:
+        pos = positions if positions is not None else jnp.arange(S)[None]
+        q = apply_rope(q, pos, freqs)
+        k = apply_rope(k, pos, freqs)
+    out = kref.mha_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), causal=causal,
+                             compute_dtype=_compute_dtype(cfg))
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return out @ p["wo"], (k, v)
+
+
+def attn_cross(cfg: ArchCfg, p, x, kv_cache):
+    """Cross-attention against precomputed (k, v) from the encoder."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k, v = kv_cache
+    out = kref.mha_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), causal=False,
+                             compute_dtype=_compute_dtype(cfg))
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return out @ p["wo"]
+
+
+def init_kv_cache(cfg: ArchCfg, batch: int, max_len: int, *, layers: int):
+    hd = cfg.resolved_head_dim
+    shape = (layers, batch, max_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def attn_decode(cfg: ArchCfg, p, x, k_cache, v_cache, pos, *, freqs=None):
+    """One-token decode against a dense cache.
+
+    x: (B, 1, d); k_cache/v_cache: (B, S_max, Hkv, hd); pos: scalar int —
+    the index this token writes to (== current context length).
+    Returns (out, k_cache, v_cache)."""
+    B, _, _ = x.shape
+    S_max = k_cache.shape[1]
+    q, k, v = _project_qkv(cfg, p, x, x)            # (B,1,H,hd)/(B,1,Hkv,hd)
+    if freqs is not None:
+        posb = jnp.full((B, 1), pos)
+        q = apply_rope(q, posb, freqs)
+        k = apply_rope(k, posb, freqs)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, pos, 0, 0))
+    group = cfg.n_heads // cfg.n_kv_heads
+    if _compute_dtype(cfg) == jnp.bfloat16:
+        # bf16 cache reads + grouped-query einsum (no repeat
+        # materialization); accumulation forced fp32 — §Perf "attn_bf16"
+        hd = cfg.resolved_head_dim
+        qf = (q[:, 0].astype(jnp.float32) * hd ** -0.5).astype(jnp.bfloat16)
+        q4 = qf.reshape(B, cfg.n_kv_heads, group, hd)
+        logits = jnp.einsum("bkgd,bskd->bkgs", q4, k_cache,
+                            preferred_element_type=jnp.float32)
+        mask = jnp.arange(S_max)[None, None, None, :] <= pos
+        logits = jnp.where(mask, logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgs,bskd->bkgd", probs.astype(jnp.bfloat16),
+                         v_cache, preferred_element_type=jnp.float32)
+        out = out.astype(x.dtype).reshape(B, 1, -1)
+        return out @ p["wo"], k_cache, v_cache
+    qf = q[:, 0].astype(jnp.float32) * cfg.resolved_head_dim ** -0.5
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    if group > 1:
+        kf = jnp.repeat(kf, group, axis=2)
+        vf = jnp.repeat(vf, group, axis=2)
+    logits = jnp.einsum("bhd,bshd->bhs", qf, kf)
+    mask = jnp.arange(S_max)[None, None, :] <= pos
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs, vf).astype(x.dtype)
+    out = out.reshape(B, 1, -1)
+    return out @ p["wo"], k_cache, v_cache

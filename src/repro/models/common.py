@@ -1,0 +1,252 @@
+"""Shared model building blocks: config, norms, embeddings, RoPE, MLPs.
+
+Everything is a pure function over explicit parameter pytrees (no framework
+modules): params are nested dicts of jnp arrays, layer stacks carry a
+leading L axis and are walked with lax.scan so the HLO stays O(1) in depth
+— essential for dry-run compiles of 80-layer configs on 512 devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Literal
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------------
+# configuration
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoeCfg:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SsmCfg:
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    dt_min: float = 1e-3
+    dt_max: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchCfg:
+    """One architecture = one frozen config (see repro/configs/*)."""
+
+    name: str
+    family: Literal["dense", "moe", "mamba2", "rwkv6", "zamba2", "encdec",
+                    "vlm"]
+    n_layers: int
+    d_model: int
+    n_heads: int          # 0 for attention-free archs
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0     # 0 -> d_model // n_heads
+    norm: Literal["rms", "ln"] = "rms"
+    mlp: Literal["swiglu", "gelu"] = "swiglu"
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    moe: MoeCfg | None = None
+    ssm: SsmCfg | None = None
+    # zamba2: one shared attention+MLP block applied every `attn_every`
+    # mamba layers
+    attn_every: int = 6
+    # encdec: encoder depth (decoder gets n_layers); frontend emits frames
+    n_enc_layers: int = 0
+    n_frames: int = 1500
+    # vlm: number of stub patch embeddings prepended to the text sequence
+    n_patches: int = 256
+    # dtypes
+    dtype: Any = jnp.bfloat16       # activations / layer params
+    # True for archs whose attention is quadratic in context (skip long_500k)
+    full_attention: bool = True
+    # recurrent-scan implementation: "auto" (pallas on TPU, chunked SSD
+    # elsewhere) | "chunked" | "pertoken" (sequential oracle; the dry-run
+    # baseline) — see kernels/ops.py and EXPERIMENTS.md §Perf
+    scan_impl: str = "auto"
+    # TP activation policy (§Perf H3): "free" lets GSPMD propagate whatever
+    # sharding it likes through the residual stream; "megatron" pins layer
+    # I/O replicated over 'model' (batch over DP), "sp" pins the sequence
+    # dim over 'model' between blocks.  Needs a registered runtime mesh.
+    tp_activations: str = "free"
+    # MoE dispatch (§Perf H2): "global" = sort-based global-capacity
+    # dispatch (GSPMD chooses the collectives); "ep_a2a" = shard_map
+    # expert-parallel dispatch with explicit all-to-alls over 'model'.
+    moe_impl: str = "global"
+    # parallelism policy: "tp_dp" (default 16-way TP x 16-way DP on the
+    # production mesh) or "dp_only" (params replicated, batch over every
+    # mesh axis — right for models whose heads/d_ff don't split 16 ways;
+    # see §Perf smollm study)
+    parallelism: str = "tp_dp"
+    # attention operand dtype: "f32" (baseline, exact) or "bf16" (operands
+    # communicated/stored bf16, accumulation forced fp32 — MXU-native,
+    # halves S^2 traffic and TP collective bytes; §Perf "attn_bf16")
+    attn_dtype: str = "f32"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    def reduced(self, **overrides) -> "ArchCfg":
+        """A tiny same-family variant for CPU smoke tests."""
+        small = dict(
+            n_layers=min(self.n_layers, 2 if self.family != "zamba2" else 4),
+            d_model=min(self.d_model, 64),
+            n_heads=min(self.n_heads, 4) if self.n_heads else 0,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            d_ff=min(self.d_ff, 128),
+            vocab=min(self.vocab, 512),
+            head_dim=16 if self.n_heads else 0,
+            n_enc_layers=min(self.n_enc_layers, 2),
+            n_frames=min(self.n_frames, 8),
+            n_patches=min(self.n_patches, 4),
+            attn_every=2,
+            dtype=jnp.float32,
+        )
+        if self.moe:
+            small["moe"] = dataclasses.replace(self.moe, n_experts=4, top_k=2,
+                                               d_expert=32)
+        if self.ssm:
+            small["ssm"] = dataclasses.replace(self.ssm, d_state=8,
+                                               head_dim=8)
+        # zamba2 kv heads = heads in the shared block
+        if self.family == "zamba2":
+            small["n_kv_heads"] = small["n_heads"]
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+# ----------------------------------------------------------------------------
+# initialisation helpers
+# ----------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def stacked(keys, fn):
+    """Init one param per layer and stack along axis 0 (for lax.scan)."""
+    return jax.vmap(fn)(keys)
+
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+
+def init_norm(cfg: ArchCfg, dtype=None):
+    dtype = dtype or cfg.dtype
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "ln":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(cfg: ArchCfg, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rms":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True)
+                               + cfg.norm_eps)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# rotary position embeddings
+# ----------------------------------------------------------------------------
+
+def rope_freqs(cfg: ArchCfg) -> jax.Array:
+    hd = cfg.resolved_head_dim
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32)
+                                     / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               freqs: jax.Array) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------------
+
+def init_mlp(cfg: ArchCfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp == "swiglu":
+        return {"w_gate": dense_init(k1, (d, f), cfg.dtype),
+                "w_up": dense_init(k2, (d, f), cfg.dtype),
+                "w_down": dense_init(k3, (f, d), cfg.dtype)}
+    return {"w_up": dense_init(k1, (d, f), cfg.dtype),
+            "b_up": jnp.zeros((f,), cfg.dtype),
+            "w_down": dense_init(k2, (f, d), cfg.dtype),
+            "b_down": jnp.zeros((d,), cfg.dtype)}
+
+
+def apply_mlp(cfg: ArchCfg, p, x):
+    if cfg.mlp == "swiglu":
+        g = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32))
+        u = (x @ p["w_up"]).astype(jnp.float32)
+        return ((g * u).astype(x.dtype)) @ p["w_down"]
+    h = jax.nn.gelu((x @ p["w_up"] + p["b_up"]).astype(jnp.float32))
+    return h.astype(x.dtype) @ p["w_down"] + p["b_down"]
+
+
+# ----------------------------------------------------------------------------
+# embeddings / head
+# ----------------------------------------------------------------------------
+
+def init_embed(cfg: ArchCfg, key):
+    k1, k2 = jax.random.split(key)
+    p = {"tok": dense_init(k1, (cfg.vocab, cfg.d_model), cfg.dtype,
+                           scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, (cfg.d_model, cfg.vocab), cfg.dtype)
+    return p
+
+
+def embed_tokens(p, tokens):
+    return p["tok"][tokens]
+
+
+def lm_head(cfg: ArchCfg, p, h):
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    return (h @ w).astype(jnp.float32)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_id: int = -1) -> jax.Array:
+    """Mean token cross-entropy in fp32; labels == ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,176 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+The conv1d mel frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, n_frames, d_model).  The encoder
+is a non-causal transformer over frames with a learned positional table;
+the decoder is a causal transformer with cross-attention to the encoder
+output.  Decoder positions use RoPE instead of Whisper's learned absolute
+table so the assigned 32k-token decode shapes are well-defined (deviation
+noted in DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common
+from repro.models.common import ArchCfg, dense_init
+
+
+def init_enc_layer(cfg: ArchCfg, key):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": common.init_norm(cfg), "ln2": common.init_norm(cfg),
+            "attn": attn.init_attn(cfg, k1),
+            "mlp": common.init_mlp(cfg, k2)}
+
+
+def init_dec_layer(cfg: ArchCfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": common.init_norm(cfg), "ln2": common.init_norm(cfg),
+            "ln3": common.init_norm(cfg),
+            "self_attn": attn.init_attn(cfg, k1),
+            "cross_attn": attn.init_attn(cfg, k2),
+            "mlp": common.init_mlp(cfg, k3)}
+
+
+def init_lm(cfg: ArchCfg, key):
+    ke, kp, kenc, kdec, kn = jax.random.split(key, 5)
+    return {
+        "embed": common.init_embed(cfg, ke),
+        "enc_pos": dense_init(kp, (cfg.n_frames, cfg.d_model), cfg.dtype,
+                              scale=0.02),
+        "enc_layers": common.stacked(jax.random.split(kenc, cfg.n_enc_layers),
+                                     functools.partial(init_enc_layer, cfg)),
+        "dec_layers": common.stacked(jax.random.split(kdec, cfg.n_layers),
+                                     functools.partial(init_dec_layer, cfg)),
+        "enc_norm": common.init_norm(cfg),
+        "final_norm": common.init_norm(cfg),
+    }
+
+
+def encode(cfg: ArchCfg, params, frames, *, remat: bool = True):
+    """frames: (B, n_frames, d) stub embeddings -> encoder output."""
+    h = frames.astype(cfg.dtype) + params["enc_pos"][None]
+
+    def body(h, lp):
+        a, _ = attn.attn_full(cfg, lp["attn"],
+                              common.apply_norm(cfg, lp["ln1"], h),
+                              freqs=None, causal=False)
+        h = h + a
+        h = h + common.apply_mlp(cfg, lp["mlp"],
+                                 common.apply_norm(cfg, lp["ln2"], h))
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return common.apply_norm(cfg, params["enc_norm"], h)
+
+
+def _cross_kv(cfg: ArchCfg, lp, enc_out):
+    """Precompute cross-attention K/V for one decoder layer."""
+    B, F, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    p = lp["cross_attn"]
+    k = enc_out @ p["wk"]
+    v = enc_out @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return (k.reshape(B, F, cfg.n_kv_heads, hd),
+            v.reshape(B, F, cfg.n_kv_heads, hd))
+
+
+def decode_stack(cfg: ArchCfg, params, h, enc_out, *, remat: bool = True):
+    freqs = common.rope_freqs(cfg)
+
+    def body(h, lp):
+        a, _ = attn.attn_full(cfg, lp["self_attn"],
+                              common.apply_norm(cfg, lp["ln1"], h),
+                              freqs=freqs, causal=True)
+        h = h + a
+        kv = _cross_kv(cfg, lp, enc_out)
+        h = h + attn.attn_cross(cfg, lp["cross_attn"],
+                                common.apply_norm(cfg, lp["ln2"], h), kv)
+        h = h + common.apply_mlp(cfg, lp["mlp"],
+                                 common.apply_norm(cfg, lp["ln3"], h))
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["dec_layers"])
+    return common.apply_norm(cfg, params["final_norm"], h)
+
+
+def train_loss(cfg: ArchCfg, params, batch, *, remat: bool = True):
+    enc_out = encode(cfg, params, batch["frames"], remat=remat)
+    h = common.embed_tokens(params["embed"], batch["tokens"])
+    h = decode_stack(cfg, params, h, enc_out, remat=remat)
+    logits = common.lm_head(cfg, params["embed"], h)
+    return common.cross_entropy(logits, batch["labels"])
+
+
+# ----------------------------------------------------------------------------
+# serving
+# ----------------------------------------------------------------------------
+
+def prefill(cfg: ArchCfg, params, batch, *, max_len: int | None = None,
+            remat: bool = True):
+    """Encode frames + prefill decoder tokens.  Returns (logits, state)."""
+    enc_out = encode(cfg, params, batch["frames"], remat=remat)
+    h = common.embed_tokens(params["embed"], batch["tokens"])
+    B, S, _ = h.shape
+    max_len = max_len or S
+    freqs = common.rope_freqs(cfg)
+
+    def body(h, lp):
+        a, (k, v) = attn.attn_full(cfg, lp["self_attn"],
+                                   common.apply_norm(cfg, lp["ln1"], h),
+                                   freqs=freqs, causal=True)
+        h = h + a
+        ckv = _cross_kv(cfg, lp, enc_out)
+        h = h + attn.attn_cross(cfg, lp["cross_attn"],
+                                common.apply_norm(cfg, lp["ln2"], h), ckv)
+        h = h + common.apply_mlp(cfg, lp["mlp"],
+                                 common.apply_norm(cfg, lp["ln3"], h))
+        pad = max_len - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return h, (k, v, ckv[0], ckv[1])
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, (ks, vs, cks, cvs) = jax.lax.scan(body, h, params["dec_layers"])
+    h = common.apply_norm(cfg, params["final_norm"], h)
+    logits = common.lm_head(cfg, params["embed"], h[:, -1:])
+    return logits, {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs}
+
+
+def decode_step(cfg: ArchCfg, params, token, state, pos):
+    h = common.embed_tokens(params["embed"], token)
+    freqs = common.rope_freqs(cfg)
+
+    def body(h, xs):
+        lp, kc, vc, ck, cv = xs
+        x = common.apply_norm(cfg, lp["ln1"], h)
+        a, kc, vc = attn.attn_decode(cfg, lp["self_attn"], x, kc, vc, pos,
+                                     freqs=freqs)
+        h = h + a
+        h = h + attn.attn_cross(cfg, lp["cross_attn"],
+                                common.apply_norm(cfg, lp["ln2"], h),
+                                (ck, cv))
+        h = h + common.apply_mlp(cfg, lp["mlp"],
+                                 common.apply_norm(cfg, lp["ln3"], h))
+        return h, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["dec_layers"], state["k"],
+                                         state["v"], state["cross_k"],
+                                         state["cross_v"]))
+    h = common.apply_norm(cfg, params["final_norm"], h)
+    logits = common.lm_head(cfg, params["embed"], h)
+    return logits, {**state, "k": ks, "v": vs}

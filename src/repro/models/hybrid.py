@@ -1,0 +1,178 @@
+"""Zamba2-style hybrid LM: Mamba2 backbone + one *shared* attention block.
+
+The backbone is a stack of Mamba2 mixer layers; a single shared
+transformer block (full-attention + MLP, one parameter set) is applied
+after every ``attn_every`` backbone layers — Zamba2's weight-sharing trick.
+(The per-invocation LoRA adapters of the released checkpoints are omitted;
+noted in DESIGN.md §Arch-applicability.)
+
+Decode state = per-layer Mamba states (O(1)) + one KV cache per shared-
+block *application* (same weights, different activations — so n_apps
+caches).  Context length only grows the shared-block caches, which is why
+this arch legitimately runs long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common, ssm
+from repro.models.common import ArchCfg
+
+
+def n_shared_applications(cfg: ArchCfg) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_lm(cfg: ArchCfg, key):
+    ke, km, ks, kf = jax.random.split(key, 4)
+    layer_keys = jax.random.split(km, cfg.n_layers)
+
+    def one(k):
+        return {"ln": common.init_norm(cfg),
+                "mixer": ssm.init_mamba(cfg, k)}
+
+    k1, k2 = jax.random.split(ks)
+    shared = {"ln1": common.init_norm(cfg), "ln2": common.init_norm(cfg),
+              "attn": attn.init_attn(cfg, k1),
+              "mlp": common.init_mlp(cfg, k2)}
+    return {"embed": common.init_embed(cfg, ke),
+            "mamba": common.stacked(layer_keys, one),
+            "shared": shared,
+            "final_norm": common.init_norm(cfg)}
+
+
+def _slice_layers(tree, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def _mamba_span(cfg: ArchCfg, params, h, lo, hi, *, remat, collect_state=False):
+    def body(h, lp):
+        x = common.apply_norm(cfg, lp["ln"], h)
+        if collect_state:
+            y, (conv, ssd) = ssm.apply_mamba(cfg, lp["mixer"], x,
+                                             return_state=True)
+            return h + y, (conv, ssd)
+        return h + ssm.apply_mamba(cfg, lp["mixer"], x), None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.lax.scan(body, h, _slice_layers(params["mamba"], lo, hi))
+
+
+def _shared_full(cfg: ArchCfg, sp, h, freqs, *, want_cache=False):
+    a, kv = attn.attn_full(cfg, sp["attn"],
+                           common.apply_norm(cfg, sp["ln1"], h),
+                           freqs=freqs, causal=True)
+    h = h + a
+    h = h + common.apply_mlp(cfg, sp["mlp"],
+                             common.apply_norm(cfg, sp["ln2"], h))
+    return (h, kv) if want_cache else (h, None)
+
+
+def _spans(cfg: ArchCfg):
+    """[(lo, hi, shared_after), ...] covering all backbone layers."""
+    napps = n_shared_applications(cfg)
+    spans = [(g * cfg.attn_every, (g + 1) * cfg.attn_every, True)
+             for g in range(napps)]
+    if napps * cfg.attn_every < cfg.n_layers:
+        spans.append((napps * cfg.attn_every, cfg.n_layers, False))
+    return spans
+
+
+def forward(cfg: ArchCfg, params, h, *, remat: bool = True):
+    freqs = common.rope_freqs(cfg)
+    for lo, hi, shared in _spans(cfg):
+        h, _ = _mamba_span(cfg, params, h, lo, hi, remat=remat)
+        if shared:
+            h, _ = _shared_full(cfg, params["shared"], h, freqs)
+    return common.apply_norm(cfg, params["final_norm"], h)
+
+
+def train_loss(cfg: ArchCfg, params, batch, *, remat: bool = True):
+    h = common.embed_tokens(params["embed"], batch["tokens"])
+    h = forward(cfg, params, h, remat=remat)
+    logits = common.lm_head(cfg, params["embed"], h)
+    return common.cross_entropy(logits, batch["labels"])
+
+
+# ----------------------------------------------------------------------------
+# serving
+# ----------------------------------------------------------------------------
+
+def init_state(cfg: ArchCfg, batch: int, max_len: int):
+    st = ssm.init_mamba_state(cfg, batch, layers=cfg.n_layers)
+    napps = n_shared_applications(cfg)
+    kv = attn.init_kv_cache(cfg, batch, max_len, layers=napps)
+    return {"mamba": st, "kv": kv}
+
+
+def prefill(cfg: ArchCfg, params, batch, *, max_len: int | None = None,
+            remat: bool = True):
+    h = common.embed_tokens(params["embed"], batch["tokens"])
+    B, S, _ = h.shape
+    max_len = max_len or S
+    freqs = common.rope_freqs(cfg)
+    convs, ssds, kvs = [], [], []
+    for lo, hi, shared in _spans(cfg):
+        h, (conv, ssd) = _mamba_span(cfg, params, h, lo, hi, remat=remat,
+                                     collect_state=True)
+        convs.append(conv)
+        ssds.append(ssd)
+        if shared:
+            h, (k, v) = _shared_full(cfg, params["shared"], h, freqs,
+                                     want_cache=True)
+            pad = max_len - S
+            kvs.append((jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                        jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))))
+    h = common.apply_norm(cfg, params["final_norm"], h)
+    logits = common.lm_head(cfg, params["embed"], h[:, -1:])
+    state = {
+        "mamba": {"conv": jnp.concatenate(convs, 0),
+                  "ssd": jnp.concatenate(ssds, 0)},
+        "kv": {"k": jnp.stack([k for k, _ in kvs]),
+               "v": jnp.stack([v for _, v in kvs])},
+    }
+    return logits, state
+
+
+def decode_step(cfg: ArchCfg, params, token, state, pos):
+    h = common.embed_tokens(params["embed"], token)
+    freqs = common.rope_freqs(cfg)
+    mamba = state["mamba"]
+    kvs = state["kv"]
+    new_conv = mamba["conv"]
+    new_ssd = mamba["ssd"]
+    new_k, new_v = kvs["k"], kvs["v"]
+    app = 0
+    for lo, hi, shared in _spans(cfg):
+        def body(h, xs):
+            lp, conv, ssd = xs
+            x = common.apply_norm(cfg, lp["ln"], h)
+            y, conv, ssd = ssm.mamba_decode_step(cfg, lp["mixer"], x, conv,
+                                                 ssd)
+            return h + y, (conv, ssd)
+
+        h, (conv, ssd) = jax.lax.scan(
+            body, h, (_slice_layers(params["mamba"], lo, hi),
+                      mamba["conv"][lo:hi], mamba["ssd"][lo:hi]))
+        new_conv = jax.lax.dynamic_update_slice_in_dim(new_conv, conv, lo, 0)
+        new_ssd = jax.lax.dynamic_update_slice_in_dim(new_ssd, ssd, lo, 0)
+        if shared:
+            sp = params["shared"]
+            x = common.apply_norm(cfg, sp["ln1"], h)
+            a, kc, vc = attn.attn_decode(cfg, sp["attn"], x,
+                                         kvs["k"][app], kvs["v"][app], pos,
+                                         freqs=freqs)
+            h = h + a
+            h = h + common.apply_mlp(cfg, sp["mlp"],
+                                     common.apply_norm(cfg, sp["ln2"], h))
+            new_k = new_k.at[app].set(kc)
+            new_v = new_v.at[app].set(vc)
+            app += 1
+    h = common.apply_norm(cfg, params["final_norm"], h)
+    logits = common.lm_head(cfg, params["embed"], h)
+    return logits, {"mamba": {"conv": new_conv, "ssd": new_ssd},
+                    "kv": {"k": new_k, "v": new_v}}

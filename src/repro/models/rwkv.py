@@ -1,0 +1,217 @@
+"""RWKV6 (Finch) LM: token-shift time-mix with data-dependent decay +
+squared-ReLU channel-mix.  Attention-free: decode state is O(1) in context
+length (token-shift vectors + the (dh x dh) wkv state per head), so this
+arch runs the long_500k shape at constant per-step cost.
+
+The wkv recurrence runs through kernels/ops.rwkv6_scan (Pallas kernel on
+TPU, jnp scan under GSPMD).  The decay LoRA (w = exp(-exp(w0 +
+tanh(x A) B))) is kept — it is the architecture's headline feature; the
+r/k/v/g token-shift mixes use static learned lerps (the ddlerp LoRA on
+those is dropped for size — noted in DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import common
+from repro.models.common import ArchCfg, dense_init
+
+DECAY_LORA = 64
+
+
+def _heads(cfg: ArchCfg):
+    hd = cfg.resolved_head_dim
+    return cfg.d_model // hd, hd
+
+
+def init_time_mix(cfg: ArchCfg, key):
+    d = cfg.d_model
+    H, hd = _heads(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), cfg.dtype),  # r,k,v,w,g lerps
+        "w_r": dense_init(ks[0], (d, d), cfg.dtype),
+        "w_k": dense_init(ks[1], (d, d), cfg.dtype),
+        "w_v": dense_init(ks[2], (d, d), cfg.dtype),
+        "w_g": dense_init(ks[3], (d, d), cfg.dtype),
+        "w_o": dense_init(ks[4], (d, d), cfg.dtype),
+        "w0": jnp.full((d,), -3.0, jnp.float32),
+        "w_lora_a": dense_init(ks[5], (d, DECAY_LORA), jnp.float32),
+        "w_lora_b": dense_init(ks[6], (DECAY_LORA, d), jnp.float32,
+                               scale=0.01),
+        "u": dense_init(ks[7], (H, hd), jnp.float32, scale=0.1),
+        "gn_scale": jnp.ones((d,), cfg.dtype),
+    }
+
+
+def init_channel_mix(cfg: ArchCfg, key):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d), cfg.dtype),  # k, r lerps
+        "w_k": dense_init(k1, (d, f), cfg.dtype),
+        "w_v": dense_init(k2, (f, d), cfg.dtype),
+        "w_r": dense_init(k3, (d, d), cfg.dtype),
+    }
+
+
+def _shift(x, prev=None):
+    """x_{t-1} along seq; first step uses `prev` (decode) or zeros."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xx, mu):
+    return x + (xx - x) * mu
+
+
+def _decay(p, xw):
+    lo = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    return jnp.exp(-jnp.exp(p["w0"] + lo))
+
+
+def _head_norm(cfg: ArchCfg, p, y):
+    """Per-head RMS normalisation of the wkv output."""
+    H, hd = _heads(cfg)
+    shp = y.shape
+    yf = y.astype(jnp.float32).reshape(shp[:-1] + (H, hd))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True)
+                            + cfg.norm_eps)
+    return (yf.reshape(shp) * p["gn_scale"].astype(jnp.float32))
+
+
+def time_mix(cfg: ArchCfg, p, x, *, state=None, impl="auto",
+             return_state=False):
+    """x: (B, S, d).  state = (prev_token (B,d), wkv (B,H,dh,dh)) for decode."""
+    H, hd = _heads(cfg)
+    B, S, d = x.shape
+    prev, wkv0 = (None, None) if state is None else state
+    xx = _shift(x, prev)
+    mr, mk, mv, mw, mg = p["mu"]
+    r = (_lerp(x, xx, mr) @ p["w_r"]).reshape(B, S, H, hd)
+    k = (_lerp(x, xx, mk) @ p["w_k"]).reshape(B, S, H, hd)
+    v = (_lerp(x, xx, mv) @ p["w_v"]).reshape(B, S, H, hd)
+    g = jax.nn.silu((_lerp(x, xx, mg) @ p["w_g"]).astype(jnp.float32))
+    w = _decay(p, _lerp(x, xx, mw)).reshape(B, S, H, hd)
+
+    if impl == "auto":
+        impl = cfg.scan_impl
+    if S == 1:
+        impl = "pertoken"  # decode: one step, the oracle is exact + minimal
+    if return_state or state is not None:
+        y, wkv = ops.rwkv6_scan(r, k, v, w.astype(r.dtype), p["u"],
+                                s0=wkv0, return_state=True, impl=impl)
+    else:
+        y = ops.rwkv6_scan(r, k, v, w.astype(r.dtype), p["u"], impl=impl)
+        wkv = None
+    y = _head_norm(cfg, p, y.reshape(B, S, d)) * g
+    out = y.astype(x.dtype) @ p["w_o"]
+    if return_state or state is not None:
+        return out, (x[:, -1], wkv)
+    return out
+
+
+def channel_mix(cfg: ArchCfg, p, x, *, state=None, return_state=False):
+    prev = None if state is None else state
+    xx = _shift(x, prev)
+    mk, mr = p["mu"]
+    k = jnp.square(jax.nn.relu((_lerp(x, xx, mk) @ p["w_k"])
+                               .astype(jnp.float32)))
+    rgate = jax.nn.sigmoid((_lerp(x, xx, mr) @ p["w_r"]).astype(jnp.float32))
+    out = (rgate * (k.astype(x.dtype) @ p["w_v"]).astype(jnp.float32))
+    out = out.astype(x.dtype)
+    if return_state or state is not None:
+        return out, x[:, -1]
+    return out
+
+
+# ----------------------------------------------------------------------------
+# LM stack
+# ----------------------------------------------------------------------------
+
+def init_lm(cfg: ArchCfg, key):
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": common.init_norm(cfg), "ln2": common.init_norm(cfg),
+                "tm": init_time_mix(cfg, k1),
+                "cm": init_channel_mix(cfg, k2)}
+
+    return {"embed": common.init_embed(cfg, ke),
+            "layers": common.stacked(layer_keys, one),
+            "final_norm": common.init_norm(cfg)}
+
+
+def forward(cfg: ArchCfg, params, h, *, remat: bool = True):
+    def body(h, lp):
+        h = h + time_mix(cfg, lp["tm"], common.apply_norm(cfg, lp["ln1"], h))
+        h = h + channel_mix(cfg, lp["cm"],
+                            common.apply_norm(cfg, lp["ln2"], h))
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return common.apply_norm(cfg, params["final_norm"], h)
+
+
+def train_loss(cfg: ArchCfg, params, batch, *, remat: bool = True):
+    h = common.embed_tokens(params["embed"], batch["tokens"])
+    h = forward(cfg, params, h, remat=remat)
+    logits = common.lm_head(cfg, params["embed"], h)
+    return common.cross_entropy(logits, batch["labels"])
+
+
+def init_state(cfg: ArchCfg, batch: int, *, layers: int):
+    H, hd = _heads(cfg)
+    d = cfg.d_model
+    return {
+        "tm_shift": jnp.zeros((layers, batch, d), cfg.dtype),
+        "cm_shift": jnp.zeros((layers, batch, d), cfg.dtype),
+        "wkv": jnp.zeros((layers, batch, H, hd, hd), jnp.float32),
+    }
+
+
+def prefill(cfg: ArchCfg, params, batch, *, remat: bool = True):
+    h = common.embed_tokens(params["embed"], batch["tokens"])
+
+    def body(h, lp):
+        x1 = common.apply_norm(cfg, lp["ln1"], h)
+        y, (tms, wkv) = time_mix(cfg, lp["tm"], x1, return_state=True)
+        h = h + y
+        x2 = common.apply_norm(cfg, lp["ln2"], h)
+        y, cms = channel_mix(cfg, lp["cm"], x2, return_state=True)
+        return h + y, (tms, cms, wkv)
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, (tms, cms, wkvs) = jax.lax.scan(body, h, params["layers"])
+    h = common.apply_norm(cfg, params["final_norm"], h)
+    logits = common.lm_head(cfg, params["embed"], h[:, -1:])
+    return logits, {"tm_shift": tms, "cm_shift": cms, "wkv": wkvs}
+
+
+def decode_step(cfg: ArchCfg, params, token, state, pos=None):
+    h = common.embed_tokens(params["embed"], token)
+
+    def body(h, xs):
+        lp, tms, cms, wkv = xs
+        x1 = common.apply_norm(cfg, lp["ln1"], h)
+        y, (tms, wkv) = time_mix(cfg, lp["tm"], x1, state=(tms, wkv))
+        h = h + y
+        x2 = common.apply_norm(cfg, lp["ln2"], h)
+        y, cms = channel_mix(cfg, lp["cm"], x2, state=cms)
+        return h + y, (tms, cms, wkv)
+
+    h, (tms, cms, wkvs) = jax.lax.scan(
+        body, h, (params["layers"], state["tm_shift"], state["cm_shift"],
+                  state["wkv"]))
+    h = common.apply_norm(cfg, params["final_norm"], h)
+    logits = common.lm_head(cfg, params["embed"], h)
+    return logits, {"tm_shift": tms, "cm_shift": cms, "wkv": wkvs}

@@ -1,0 +1,211 @@
+"""Mamba2 (SSD) mixer block and LM stack.
+
+The mixer follows the Mamba2 layout with n_groups = 1: a fused input
+projection producing (z, x, B, C, dt), a short depthwise causal conv over
+(x | B | C), softplus dt, the SSD scan (kernels: Pallas chunked kernel on
+TPU, jnp oracle under GSPMD), a gated RMSNorm and the output projection.
+
+Decode keeps O(1) state per layer — (conv tail, SSD state) — which is why
+the ssm/hybrid archs are the only ones that run the long_500k shape: a
+524288-token context costs the same per step as a 1-token one.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import common
+from repro.models.common import ArchCfg, dense_init
+
+
+def _dims(cfg: ArchCfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.d_state, s.conv_width
+
+
+def init_mamba(cfg: ArchCfg, key):
+    s = cfg.ssm
+    d_inner, H, ds, cw = _dims(cfg)
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    conv_ch = d_inner + 2 * ds
+    return {
+        # packed projection: z | x | B | C | dt
+        "w_in": dense_init(k1, (d, 2 * d_inner + 2 * ds + H), cfg.dtype),
+        "conv_w": dense_init(k2, (cw, conv_ch), cfg.dtype, scale=cw ** -0.5),
+        "conv_b": jnp.zeros((conv_ch,), cfg.dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), cfg.dtype),
+        "w_out": dense_init(k4, (d_inner, d), cfg.dtype),
+    }
+
+
+def _split_proj(cfg: ArchCfg, proj):
+    d_inner, H, ds, _ = _dims(cfg)
+    z, x, b, c, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + ds, 2 * d_inner + 2 * ds],
+        axis=-1)
+    return z, x, b, c, dt
+
+
+def _gated_norm(cfg: ArchCfg, p, y, z):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True)
+                            + cfg.norm_eps)
+    return (yf * p["norm_scale"].astype(jnp.float32)).astype(y.dtype)
+
+
+def apply_mamba(cfg: ArchCfg, p, hx, *, impl="auto", return_state=False):
+    """Full-sequence mixer: hx (B, S, d) -> (B, S, d).
+
+    With return_state=True also returns (conv_tail, ssd_state) — the O(1)
+    decode state after consuming the sequence (prefill path; uses the ref
+    scan, which is the GSPMD-shardable implementation anyway)."""
+    d_inner, H, ds, cw = _dims(cfg)
+    s = cfg.ssm
+    B, S, _ = hx.shape
+    proj = hx @ p["w_in"]
+    z, x, bm, cm, dt = _split_proj(cfg, proj)
+    # depthwise causal conv over (x | B | C)
+    xbc_raw = jnp.concatenate([x, bm, cm], axis=-1)
+    pad = jnp.pad(xbc_raw, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S] * p["conv_w"][i] for i in range(cw))
+    xbc = jax.nn.silu((conv + p["conv_b"]).astype(jnp.float32)).astype(hx.dtype)
+    x, bm, cm = jnp.split(xbc, [d_inner, d_inner + ds], axis=-1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dtv = jnp.clip(dtv, s.dt_min, None)
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(B, S, H, s.head_dim)
+    if impl == "auto":
+        impl = cfg.scan_impl
+    if return_state:
+        y, ssd = ops.mamba2_scan(xh, dtv, A, bm, cm, p["D"], impl=impl,
+                                 return_state=True)
+    else:
+        y = ops.mamba2_scan(xh, dtv, A, bm, cm, p["D"], impl=impl)
+    y = y.reshape(B, S, d_inner)
+    out = _gated_norm(cfg, p, y, z) @ p["w_out"]
+    if return_state:
+        conv_tail = pad[:, S:]   # last cw-1 raw (pre-activation) inputs
+        return out, (conv_tail, ssd)
+    return out
+
+
+# -- decode (single step, O(1) state) -----------------------------------------
+
+def init_mamba_state(cfg: ArchCfg, batch: int, *, layers: int):
+    d_inner, H, ds, cw = _dims(cfg)
+    conv_ch = d_inner + 2 * ds
+    return {
+        "conv": jnp.zeros((layers, batch, cw - 1, conv_ch), cfg.dtype),
+        "ssd": jnp.zeros((layers, batch, H, ds, cfg.ssm.head_dim),
+                         jnp.float32),
+    }
+
+
+def mamba_decode_step(cfg: ArchCfg, p, hx, conv_state, ssd_state):
+    """hx: (B, 1, d); returns (out (B,1,d), conv_state, ssd_state)."""
+    d_inner, H, ds, cw = _dims(cfg)
+    s = cfg.ssm
+    B = hx.shape[0]
+    proj = hx[:, 0] @ p["w_in"]
+    z, x, bm, cm, dt = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([x, bm, cm], axis=-1)      # (B, conv_ch)
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # (B,cw,ch)
+    conv_state = window[:, 1:]
+    conv = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv.astype(jnp.float32)).astype(hx.dtype)
+    x, bm, cm = jnp.split(xbc, [d_inner, d_inner + ds], axis=-1)
+    dtv = jnp.clip(jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"]),
+                   s.dt_min, None)                   # (B, H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(A[None] * dtv)                   # (B, H)
+    xh = x.reshape(B, H, s.head_dim).astype(jnp.float32)
+    inject = jnp.einsum("bs,bhd->bhsd", bm.astype(jnp.float32),
+                        xh * dtv[..., None])
+    ssd_state = ssd_state * decay[..., None, None] + inject
+    y = jnp.einsum("bs,bhsd->bhd", cm.astype(jnp.float32), ssd_state)
+    y = y.reshape(B, d_inner) + p["D"].repeat(s.head_dim) * x.astype(
+        jnp.float32).reshape(B, d_inner)
+    y = _gated_norm(cfg, p, y.astype(hx.dtype), z)
+    return (y @ p["w_out"])[:, None], conv_state, ssd_state
+
+
+# ----------------------------------------------------------------------------
+# full LM stack (pure-mamba backbone, e.g. for ablations; Zamba2 hybrid is
+# models/hybrid.py)
+# ----------------------------------------------------------------------------
+
+def init_lm(cfg: ArchCfg, key):
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+
+    def one(k):
+        kn, km = jax.random.split(k)
+        return {"ln": common.init_norm(cfg), "mixer": init_mamba(cfg, km)}
+
+    return {"embed": common.init_embed(cfg, ke),
+            "layers": common.stacked(layer_keys, one),
+            "final_norm": common.init_norm(cfg)}
+
+
+def forward(cfg: ArchCfg, params, h, *, remat: bool = True):
+    def body(h, lp):
+        h = h + apply_mamba(cfg, lp["mixer"],
+                            common.apply_norm(cfg, lp["ln"], h))
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return common.apply_norm(cfg, params["final_norm"], h)
+
+
+def train_loss(cfg: ArchCfg, params, batch, *, remat: bool = True):
+    h = common.embed_tokens(params["embed"], batch["tokens"])
+    h = forward(cfg, params, h, remat=remat)
+    logits = common.lm_head(cfg, params["embed"], h)
+    return common.cross_entropy(logits, batch["labels"])
+
+
+def prefill(cfg: ArchCfg, params, batch, *, remat: bool = True):
+    """Returns (last-token logits, decode state) — state is O(1) in S."""
+    h = common.embed_tokens(params["embed"], batch["tokens"])
+
+    def body(h, lp):
+        x = common.apply_norm(cfg, lp["ln"], h)
+        y, (conv, ssd) = apply_mamba(cfg, lp["mixer"], x, return_state=True)
+        return h + y, (conv, ssd)
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, (convs, ssds) = jax.lax.scan(body, h, params["layers"])
+    h = common.apply_norm(cfg, params["final_norm"], h)
+    logits = common.lm_head(cfg, params["embed"], h[:, -1:])
+    return logits, {"conv": convs, "ssd": ssds}
+
+
+def decode_step(cfg: ArchCfg, params, token, state, pos=None):
+    """token: (B,1); state {'conv','ssd'} leading L axis; pos unused (O(1))."""
+    h = common.embed_tokens(params["embed"], token)
+
+    def body(h, xs):
+        lp, conv, ssd = xs
+        x = common.apply_norm(cfg, lp["ln"], h)
+        y, conv, ssd = mamba_decode_step(cfg, lp["mixer"], x, conv, ssd)
+        return h + y, (conv, ssd)
+
+    h, (convs, ssds) = jax.lax.scan(body, h, (params["layers"],
+                                              state["conv"], state["ssd"]))
+    h = common.apply_norm(cfg, params["final_norm"], h)
+    logits = common.lm_head(cfg, params["embed"], h)
+    return logits, {"conv": convs, "ssd": ssds}

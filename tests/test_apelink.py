@@ -1,0 +1,136 @@
+"""APElink codec + efficiency/latency model tests (paper §2.3, §3)."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core import apelink, hw
+
+WORDS = st.lists(st.integers(0, 2**32 - 1), min_size=0, max_size=300)
+
+
+def test_single_packet_roundtrip():
+    pay = np.arange(40, dtype=np.uint32)
+    [(dest, got)] = apelink.decode_stream(apelink.encode_packet(pay, dest=9))
+    assert dest == 9
+    np.testing.assert_array_equal(got, pay)
+
+
+@hp.given(WORDS, st.integers(0, 255))
+def test_roundtrip_property(words, dest):
+    pay = np.array(words, dtype=np.uint32)
+    [(d, got)] = apelink.decode_stream(apelink.encode_packet(pay, dest=dest))
+    assert d == dest
+    np.testing.assert_array_equal(got, pay)
+
+
+@hp.given(st.lists(WORDS, min_size=1, max_size=5))
+def test_multi_packet_stream_roundtrip(packets):
+    stream = np.concatenate(
+        [apelink.encode_packet(np.array(p, np.uint32), dest=i % 256)
+         for i, p in enumerate(packets)])
+    decoded = apelink.decode_stream(stream)
+    assert len(decoded) == len(packets)
+    for i, (d, got) in enumerate(decoded):
+        assert d == i % 256
+        np.testing.assert_array_equal(got, np.array(packets[i], np.uint32))
+
+
+def test_stuffing_payload_full_of_magic():
+    pay = np.full(64, apelink.MAGIC, dtype=np.uint32)
+    enc = apelink.encode_packet(pay)
+    assert enc.size == 64 * 2 + 4  # every payload word doubled + 4 framing
+    [(_, got)] = apelink.decode_stream(enc)
+    np.testing.assert_array_equal(got, pay)
+
+
+def test_corruption_detected():
+    pay = np.arange(32, dtype=np.uint32)
+    enc = apelink.encode_packet(pay)
+    enc = enc.copy()
+    enc[5] ^= np.uint32(1)  # flip a payload bit
+    with pytest.raises(ValueError):
+        apelink.decode_stream(enc)
+
+
+def test_truncation_detected():
+    enc = apelink.encode_packet(np.arange(32, dtype=np.uint32))
+    with pytest.raises(ValueError):
+        apelink.decode_stream(enc[:-3])
+
+
+def test_efficiency_matches_paper():
+    # paper §2.3: total efficiency 0.784
+    assert apelink.protocol_efficiency() == pytest.approx(0.784, abs=1e-3)
+    rng = np.random.default_rng(1)
+    pay = rng.integers(0, 2**32, size=16 * 1024, dtype=np.uint32)
+    meas = apelink.measured_efficiency(pay, apelink.DEFAULT_PAYLOAD_WORDS)
+    assert meas == pytest.approx(0.784, abs=1e-3)
+
+
+def test_efficiency_monotone_in_packet_size():
+    etas = [apelink.protocol_efficiency(p) for p in (2, 4, 8, 16, 64, 256)]
+    assert all(a < b for a, b in zip(etas, etas[1:]))
+    assert all(0 < e < 1 for e in etas)
+
+
+def test_channel_numbers_match_paper():
+    # 28 Gbps raw -> 2.8 GB/s channel -> ~2.2 GB/s sustained; ~40 KB buffer
+    assert hw.APELINK_28G.raw_bandwidth == pytest.approx(3.5e9)
+    assert hw.APELINK_28G.channel_bandwidth == pytest.approx(2.8e9)
+    assert apelink.sustained_bandwidth() == pytest.approx(2.2e9, rel=0.01)
+    assert apelink.channel_footprint_bytes() == pytest.approx(40e3, rel=0.02)
+
+
+def test_latency_headlines_match_paper():
+    m = apelink.NetModel()
+    small = 16
+    gg_p2p = m.latency(small, src_gpu=True, dst_gpu=True)
+    gg_staged = m.latency(small, src_gpu=True, dst_gpu=True, p2p=False)
+    gg_ib = m.latency(small, fabric="ib")
+    hh = m.latency(small)
+    assert gg_p2p == pytest.approx(8.2e-6, rel=0.02)     # Fig 3b
+    assert gg_staged == pytest.approx(16.8e-6, rel=0.02)  # Fig 3b
+    assert gg_ib == pytest.approx(17.4e-6, rel=0.02)      # Fig 3b
+    # GPU involvement costs ~30% over host-host for small messages (Fig 3a)
+    assert gg_p2p / hh == pytest.approx(1.30, abs=0.05)
+    # roundtrip is twice one-way in this model
+    assert m.roundtrip(small) == pytest.approx(2 * hh)
+
+
+def test_p2p_beats_ib_up_to_128k():
+    # Fig 3b: advantage of P2P over IB for message size up to 128 KB
+    m = apelink.NetModel()
+    for nbytes in (64, 1024, 16 * 1024, 100 * 1024):
+        assert (m.latency(nbytes, src_gpu=True, dst_gpu=True)
+                < m.latency(nbytes, fabric="ib"))
+    assert (m.latency(1 << 20, src_gpu=True, dst_gpu=True)
+            > m.latency(1 << 20, fabric="ib"))  # large messages: IB wins
+
+
+def test_bandwidth_plateaus():
+    m = apelink.NetModel()
+    big = 8 << 20
+    assert m.bandwidth(big) == pytest.approx(2.2e9, rel=0.02)  # link limit
+    # GPU-outbound bottleneck (Fig 3c): well below the link limit
+    assert m.bandwidth(big, src_gpu=True) == pytest.approx(1.4e9, rel=0.05)
+    # bandwidth is monotone in message size (latency amortisation)
+    bws = [m.bandwidth(1 << k) for k in range(6, 24, 2)]
+    assert all(a < b for a, b in zip(bws, bws[1:]))
+
+
+@hp.given(st.integers(4, 1 << 22), st.integers(1, 8))
+def test_latency_model_sane(nbytes, hops):
+    m = apelink.NetModel()
+    t = m.latency(nbytes, hops=hops)
+    assert t > 0
+    # more hops or more bytes never reduce latency
+    assert m.latency(nbytes, hops=hops + 1) >= t
+    assert m.latency(nbytes + 4096, hops=hops) >= t
+
+
+def test_nextgen_link_rates():
+    # §6: 56 Gb/s class links; measured 45.2 Gbps/channel preliminary
+    assert hw.APELINK_56G.raw_bandwidth == pytest.approx(7.05e9)
+    assert hw.APELINK_45G.raw_bandwidth == pytest.approx(5.65e9)
+    assert hw.PCIE_GEN3_X8.effective_bandwidth == pytest.approx(7.9e9, rel=0.01)

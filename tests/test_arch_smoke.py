@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one
+forward/train step on CPU, asserting output shapes and no NaNs.
+(The FULL configs are exercised only by the dry-run, which lowers without
+allocating.)
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_config, get_reduced
+from repro.models import api
+from repro.models.common import ArchCfg
+
+
+def make_batch(cfg: ArchCfg, B=2, S=16, *, labels=True, rng_seed=0):
+    rng = np.random.default_rng(rng_seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(B, S)).astype(np.int32))}
+    if labels:
+        batch["labels"] = batch["tokens"]
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_frames, cfg.d_model)), cfg.dtype)
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_patches, cfg.d_model)), cfg.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_train_step(arch):
+    cfg = get_reduced(arch)
+    model = api.get_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: model.train_loss(p, batch))(params)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), arch
+    gnorm = jnp.sqrt(sum(jnp.vdot(g, g).real
+                         for g in jax.tree.leaves(grads))).astype(jnp.float32)
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0, arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_prefill_decode(arch):
+    cfg = get_reduced(arch)
+    model = api.get_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S, labels=False)
+    if cfg.family in ("dense", "moe", "vlm", "zamba2", "encdec"):
+        logits, state = model.prefill(params, batch, max_len=S + 4,
+                                      remat=False)
+    else:
+        logits, state = model.prefill(params, batch, remat=False)
+    assert logits.shape[0] == B and logits.shape[-1] == cfg.vocab
+    assert not bool(jnp.any(jnp.isnan(logits))), arch
+    # one decode step; note VLM context includes the patch prefix
+    pos = S + (cfg.n_patches if cfg.family == "vlm" else 0)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, state2 = model.decode_step(params, tok, state, pos)
+    assert logits2.shape == (B, 1, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits2))), arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact public-literature settings."""
+    cfg = get_config(arch)
+    expect = {
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "qwen2-0_5b": (24, 896, 14, 2, 4864, 151936),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+        "smollm-135m": (30, 576, 9, 3, 1536, 49152),
+        "zamba2-1_2b": (38, 2048, 32, 32, 8192, 32000),
+        "rwkv6-1_6b": (24, 2048, 32, 0, 7168, 65536),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab)
+    assert got == expect
+    if arch == "olmoe-1b-7b":
+        assert cfg.moe.n_experts == 64 and cfg.moe.top_k == 8
+    if arch == "moonshot-v1-16b-a3b":
+        assert cfg.moe.n_experts == 64 and cfg.moe.top_k == 6
+    if arch == "zamba2-1_2b":
+        assert cfg.ssm.d_state == 64 and not cfg.full_attention
+    if arch == "rwkv6-1_6b":
+        assert not cfg.full_attention
+    if arch == "whisper-large-v3":
+        assert cfg.n_enc_layers == 32 and cfg.n_frames == 1500
+
+
+def test_param_counts_roughly_match_names():
+    """Billion-scale sanity: the configs really are the sizes on the tin."""
+    def b(n):
+        return api.param_count(get_config(n)) / 1e9
+
+    assert 6.0 < b("olmoe-1b-7b") < 8.0          # 7B total
+    # NOTE: the assignment pins 48L x 64e x 1408 -> ~28B total (the released
+    # Moonlight is 27L/16B; the assigned hyperparameters are authoritative).
+    # Its ACTIVE size still matches the "A3B" name, asserted below.
+    assert 24.0 < b("moonshot-v1-16b-a3b") < 32.0
+    assert 2.5 < b("starcoder2-3b") < 3.5
+    assert 0.3 < b("qwen2-0_5b") < 0.7
+    assert 6.0 < b("deepseek-7b") < 8.0
+    assert 0.10 < b("smollm-135m") < 0.17
+    assert 0.9 < b("zamba2-1_2b") < 1.6
+    assert 1.3 < b("rwkv6-1_6b") < 2.1
+    assert 1.2 < b("whisper-large-v3") < 2.0
+    assert 60.0 < b("internvl2-76b") < 80.0
+    # MoE active params: ~1B (olmoe), ~3B (moonlight)
+    assert 0.8 < api.active_param_count(get_config("olmoe-1b-7b")) / 1e9 < 1.7
+    assert 2.0 < api.active_param_count(
+        get_config("moonshot-v1-16b-a3b")) / 1e9 < 4.0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_input_specs_lower_nothing(arch):
+    """input_specs are pure ShapeDtypeStructs for every applicable shape."""
+    cfg = get_config(arch)
+    shapes = api.applicable_shapes(cfg)
+    assert "train_4k" in shapes
+    if arch in ("zamba2-1_2b", "rwkv6-1_6b"):
+        assert "long_500k" in shapes
+    else:
+        assert "long_500k" not in shapes
+    for s in shapes:
+        _, specs = api.input_specs(cfg, s)
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)

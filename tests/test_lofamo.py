@@ -1,0 +1,101 @@
+"""LO|FA|MO fault-awareness simulation tests (paper §4)."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.lofamo import Health, LofamoSim, awareness_time_model
+from repro.core.topology import Torus
+
+
+def make_sim(dims=(4, 4), wd=0.5):
+    return LofamoSim(Torus(dims), wd_period=wd)
+
+
+def test_no_faults_no_alarms():
+    sim = make_sim()
+    sim.run(10)
+    assert sim.detected_at_master() == set()
+
+
+def test_host_fault_detected_and_reaches_master():
+    sim = make_sim()
+    sim.run(2)  # settle
+    ev = sim.kill_host(5)
+    sim.run(4)
+    assert ev.t_local is not None and ev.t_master is not None
+    assert sim.master_view[5] is Health.HOST_FAULT
+    # awareness dominated by the watchdog period (paper: Ta ~ 2xWD worst case)
+    assert ev.awareness_time <= 2 * sim.wd + sim.service_latency + 1e-9
+
+
+def test_node_fault_detected_by_neighbours():
+    sim = make_sim()
+    sim.run(2)
+    ev = sim.kill_node(9)
+    sim.run(3)
+    assert sim.master_view[9] is Health.NODE_FAULT
+    # neighbours hold the status word about the dead node
+    t = sim.torus
+    for n in t.neighbors(9):
+        assert sim.regs[n].neighbor_status[9] is Health.NODE_FAULT
+    assert ev.awareness_time <= 2 * sim.wd + sim.service_latency + 1e-9
+
+
+def test_awareness_time_model_matches_paper():
+    # paper §4: "for a WD = 500 ms, Ta = 0.9 s"
+    assert awareness_time_model(0.5) == pytest.approx(0.9, abs=0.01)
+    # scaling: Ta tracks the watchdog period across the HPC range 1ms..1s
+    for wd in (1e-3, 1e-2, 1e-1, 1.0):
+        assert awareness_time_model(wd) == pytest.approx(1.8 * wd + 1e-3)
+
+
+def test_master_fault_detected_by_neighbours_of_master():
+    # even the master's own node fault is visible to its neighbours; the
+    # surviving master-view logic runs on whichever host reads it (here we
+    # just assert neighbours learn it)
+    sim = make_sim()
+    sim.run(1)
+    sim.kill_node(0)
+    sim.run(3)
+    for n in sim.torus.neighbors(0):
+        assert sim.regs[n].neighbor_status[0] is Health.NODE_FAULT
+
+
+@hp.given(st.sets(st.integers(0, 15), min_size=1, max_size=6), st.data())
+@hp.settings(deadline=None, max_examples=40)
+def test_multi_fault_global_awareness_property(faults, data):
+    """Paper: 'Even in case of multiple faults no area of the mesh can be
+    isolated and no fault can remain undetected at global level'.
+
+    In the protocol a fault becomes globally known iff some first-neighbour
+    of the victim keeps a live host+NIC: that neighbour's NIC learns the
+    status word (host faults are broadcast by the victim's own NIC; node
+    faults are inferred from silence) and its host reports over the service
+    network.  We assert the simulator agrees with that graph predicate in
+    both directions.
+    """
+    t = Torus((4, 4))
+    sim = LofamoSim(t, wd_period=0.5, master=data.draw(
+        st.sampled_from([r for r in range(16) if r not in faults])))
+    sim.run(1)
+    kinds = {f: data.draw(st.sampled_from(["host", "node"]), label=f"kind{f}")
+             for f in sorted(faults)}
+    for f, kind in kinds.items():
+        (sim.kill_host if kind == "host" else sim.kill_node)(f)
+    sim.run(4)
+    detected = sim.detected_at_master()
+    for f in faults:
+        has_live_reporter = any(n not in faults for n in t.neighbors(f))
+        assert (f in detected) == has_live_reporter
+
+
+def test_diagnostics_ride_the_protocol():
+    """§4: 'the addition of LO|FA|MO features has no impact on APEnet+ data
+    transfer latency' — the status exchange is piggybacked, so the model's
+    data-path latency is independent of the watchdog machinery."""
+    from repro.core.apelink import NetModel
+    m = NetModel()
+    base = m.latency(4096)
+    sim = make_sim()
+    sim.run(5)  # watchdog traffic has been flowing
+    assert m.latency(4096) == base  # nothing in the data path changed

@@ -1,0 +1,91 @@
+"""TLB behaviour + Fig 2 bandwidth-gain model (paper §2.2)."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import apelink
+from repro.core.tlb import PAGE_BYTES, T_HW_HIT, T_NIOS_WALK, Tlb
+
+
+def test_hit_miss_basic():
+    t = Tlb(entries=8, ways=2)
+    _, c0 = t.translate(0)
+    assert c0 == pytest.approx(T_NIOS_WALK + T_HW_HIT)
+    _, c1 = t.translate(100)          # same page
+    assert c1 == pytest.approx(T_HW_HIT)
+    assert t.stats.hits == 1 and t.stats.misses == 1
+
+
+def test_translation_correct_with_custom_walk():
+    t = Tlb(entries=8, ways=2, walk=lambda v: v * 7 + 3)
+    paddr, _ = t.translate(5 * PAGE_BYTES + 123)
+    assert paddr == (5 * 7 + 3) * PAGE_BYTES + 123
+    paddr2, _ = t.translate(5 * PAGE_BYTES + 99)  # hit must agree
+    assert paddr2 == (5 * 7 + 3) * PAGE_BYTES + 99
+
+
+def test_lru_eviction_within_set():
+    t = Tlb(entries=4, ways=2)  # 2 sets; pages p and p+2 share a set
+    t.translate(0)                       # set0: {0}
+    t.translate(2 * PAGE_BYTES)          # set0: {0,2}
+    t.translate(0)                       # touch 0 -> LRU is 2
+    t.translate(4 * PAGE_BYTES)          # evicts 2
+    assert t.stats.evictions == 1
+    _, c = t.translate(0)
+    assert c == pytest.approx(T_HW_HIT)  # 0 survived
+    _, c = t.translate(2 * PAGE_BYTES)
+    assert c > T_HW_HIT                  # 2 was evicted
+
+
+def test_invalidate():
+    t = Tlb(entries=8, ways=2)
+    t.translate(0)
+    t.invalidate(0)
+    _, c = t.translate(0)
+    assert c > T_HW_HIT
+    t.invalidate()  # full shootdown
+    _, c = t.translate(0)
+    assert c > T_HW_HIT
+
+
+@hp.given(st.lists(st.integers(0, 63), min_size=1, max_size=200))
+def test_stats_and_correctness_property(vpages):
+    t = Tlb(entries=16, ways=4, walk=lambda v: v + 1000)
+    for v in vpages:
+        paddr, cost = t.translate(v * PAGE_BYTES + 7)
+        assert paddr == (v + 1000) * PAGE_BYTES + 7  # always correct
+        assert cost in (pytest.approx(T_HW_HIT),
+                        pytest.approx(T_NIOS_WALK + T_HW_HIT))
+    assert t.stats.accesses == len(vpages)
+    assert 0.0 <= t.stats.hit_rate <= 1.0
+
+
+def test_fig2_bandwidth_gain_up_to_60_percent():
+    """Paper §2.2: 'A speedup of up to 60% in bandwidth ... has been
+    measured' — hot TLB vs all-miss (Nios II on every page)."""
+    t = Tlb()
+    wire = apelink.sustained_bandwidth()
+    nbytes = 1 << 20
+    bw_cold = t.receive_bandwidth(nbytes, wire, hit_rate=0.0)
+    bw_hot = t.receive_bandwidth(nbytes, wire, hit_rate=1.0)
+    gain = bw_hot / bw_cold - 1.0
+    assert gain == pytest.approx(0.60, abs=0.03)
+    # monotone in hit rate
+    bws = [t.receive_bandwidth(nbytes, wire, hit_rate=h)
+           for h in (0.0, 0.25, 0.5, 0.75, 1.0)]
+    assert all(a < b for a, b in zip(bws, bws[1:]))
+    # and the hot path is still below the raw wire limit
+    assert bw_hot < wire
+
+
+def test_receive_bandwidth_uses_measured_stats():
+    t = Tlb(entries=16, ways=4)
+    for v in range(8):
+        t.translate(v * PAGE_BYTES)   # all misses
+    assert t.receive_bandwidth(1 << 20, 2.2e9) == pytest.approx(
+        t.receive_bandwidth(1 << 20, 2.2e9, hit_rate=0.0))
+
+
+def test_entries_ways_validation():
+    with pytest.raises(ValueError):
+        Tlb(entries=10, ways=4)

@@ -1,0 +1,126 @@
+"""Torus topology invariants (unit + hypothesis property tests)."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.topology import Torus, enumerate_fault_sets
+
+DIMS = st.lists(st.integers(min_value=1, max_value=6), min_size=1, max_size=3)
+
+
+def small_torus(dims):
+    return Torus(tuple(dims))
+
+
+def test_rank_coords_roundtrip():
+    t = Torus((2, 16, 16))
+    assert t.size == 512
+    for r in (0, 1, 255, 256, 511):
+        assert t.rank(t.coords(r)) == r
+
+
+def test_row_major_matches_make_mesh_order():
+    # launch/mesh.py relies on rank == row-major device index
+    t = Torus((2, 3, 4))
+    assert t.coords(0) == (0, 0, 0)
+    assert t.coords(1) == (0, 0, 1)
+    assert t.coords(4) == (0, 1, 0)
+    assert t.coords(12) == (1, 0, 0)
+
+
+def test_neighbors_count_3d():
+    t = Torus((4, 4, 4))
+    for r in t.all_ranks():
+        assert len(t.neighbors(r)) == 6  # APEnet+: 6 off-board links
+
+
+def test_neighbors_degenerate_dims():
+    t = Torus((2, 16, 16))
+    # dim of size 2: +1 and -1 neighbours coincide -> deduped
+    assert len(t.neighbors(0)) == 5
+    assert Torus((1, 4)).neighbors(0) == [1, 3]
+
+
+@hp.given(DIMS, st.data())
+def test_route_is_dimension_ordered_and_minimal(dims, data):
+    t = small_torus(dims)
+    src = data.draw(st.integers(0, t.size - 1))
+    dst = data.draw(st.integers(0, t.size - 1))
+    path = t.route(src, dst)
+    assert path[0] == src and path[-1] == dst
+    assert len(path) - 1 == t.hop_distance(src, dst)  # minimal
+    # each consecutive pair is a first-neighbour hop; dims change in order
+    changed_dims = []
+    for a, b in zip(path, path[1:]):
+        assert b in t.neighbors(a)
+        (d,) = [i for i in range(t.ndims)
+                if t.coords(a)[i] != t.coords(b)[i]]
+        changed_dims.append(d)
+    assert changed_dims == sorted(changed_dims)  # X -> Y -> Z ordering
+
+
+@hp.given(DIMS, st.data())
+def test_hop_distance_symmetry_triangle(dims, data):
+    t = small_torus(dims)
+    a = data.draw(st.integers(0, t.size - 1))
+    b = data.draw(st.integers(0, t.size - 1))
+    c = data.draw(st.integers(0, t.size - 1))
+    assert t.hop_distance(a, b) == t.hop_distance(b, a)
+    assert t.hop_distance(a, a) == 0
+    assert t.hop_distance(a, c) <= t.hop_distance(a, b) + t.hop_distance(b, c)
+    assert t.hop_distance(a, b) <= t.diameter
+
+
+def test_diameter_and_bisection():
+    assert Torus((16, 16)).diameter == 16
+    assert Torus((2, 16, 16)).diameter == 17
+    assert Torus((4, 4)).bisection_links == 8  # 4 rings x 2 wrap links
+
+
+def test_links_count():
+    # k-ary n-cube with all dims > 2: n * size links
+    t = Torus((4, 4, 4))
+    assert len(t.links()) == 3 * t.size
+    # dims of size 2 halve their dimension's links (wrap == direct)
+    assert len(Torus((2, 4)).links()) == 4 + 8
+
+
+def test_single_fault_always_observable():
+    t = Torus((4, 4))
+    for f in t.all_ranks():
+        assert t.is_fault_observable(f, {f})
+
+
+def test_fault_observability_matches_bruteforce_k2():
+    t = Torus((3, 3))
+    for fs in enumerate_fault_sets(t, 2):
+        assert t.all_faults_observable(fs)  # 2 faults can't isolate on 3x3
+
+
+def test_isolated_fault_detected_as_unobservable():
+    # surround node 5 of a 4x4 torus with dead neighbours
+    t = Torus((4, 4))
+    victim = 5
+    failed = set(t.neighbors(victim)) | {victim}
+    assert not t.is_fault_observable(victim, failed)
+    # ... but each *neighbour* still has live neighbours
+    for n in t.neighbors(victim):
+        assert t.is_fault_observable(n, failed)
+
+
+def test_live_components_partition():
+    t = Torus((4, 4))
+    failed = {1, 4}
+    comps = t.live_components(failed)
+    assert sum(len(c) for c in comps) == t.size - len(failed)
+    assert len(comps) == 1  # 2 faults never disconnect a 4x4 torus
+
+
+def test_invalid_inputs():
+    with pytest.raises(ValueError):
+        Torus((0, 4))
+    t = Torus((4, 4))
+    with pytest.raises(ValueError):
+        t.coords(16)
+    with pytest.raises(ValueError):
+        t.rank((4, 0))
