@@ -18,6 +18,7 @@ import json
 from pathlib import Path
 
 from repro.core import hw
+from repro.core.fabric import message_time
 
 OUT = Path(__file__).resolve().parent / "out" / "dryrun"
 CHIP = hw.TPU_V5E
@@ -57,6 +58,10 @@ def cell_row(d: dict) -> dict:
         "live_GiB": (mem.get("live_bytes_per_device") or 0) / 2**30,
         "fits_hbm": mem.get("fits_hbm"),
         "link_GB": d["link_bytes_per_device"] / 1e9,
+        # the same traffic priced by the fabric cost model (apelink
+        # NetModel) instead of the raw ICI-link division
+        "fabric_collective_s": message_time(
+            int(d["link_bytes_per_device"])),
     }
 
 

@@ -16,7 +16,7 @@ import sys
 import time
 
 MODULES = ["apelink_eff", "dma_overlap", "tlb", "latency", "bandwidth",
-           "lofamo", "nextgen", "roofline"]
+           "fabric_cost", "lofamo", "nextgen", "roofline"]
 
 
 def main(argv=None) -> int:

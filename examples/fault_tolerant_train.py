@@ -3,11 +3,19 @@
   PYTHONPATH=src python examples/fault_tolerant_train.py
 
 Runs the paper-faithful "apex" communication mode (explicit bidirectional
-ring reduce-scatter / all-gather over the torus, the dual-DMA double-
-buffering trick) on 8 forced host devices, then kills a node mid-run:
-LO|FA|MO's mutual watchdog detects it, diffuses the fault to neighbours,
-the master view flags the rank, and the trainer checkpoint-restarts on the
-surviving devices (elastic re-mesh 8 -> 4) replaying the data stream.
+ring reduce-scatter / all-gather over the torus, lowered through the
+fabric's CollectiveSchedule IR) on 8 forced host devices, and exercises
+BOTH fault-handling paths:
+
+1. a torus LINK dies: LO|FA|MO's neighbour watchdogs each suspect the
+   peer, the master correlates the two still-heartbeating endpoints into a
+   link fault, and the trainer *reroutes* — the collective schedules are
+   rewritten around the dead link (detour hops, higher predicted comm
+   cost) and training continues with identical numerics, no restart;
+
+2. a whole NODE dies: detection diffuses to the neighbours, the master
+   flags the rank, and the trainer checkpoint-restarts on the surviving
+   devices (elastic re-mesh 8 -> 4) replaying the data stream.
 """
 import os
 
@@ -31,30 +39,45 @@ def main() -> None:
         tcfg = TrainerConfig(
             ckpt_dir=ckpt_dir, ckpt_every=5, batch=8, seq_len=32,
             opt=AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=40),
-            comm="apex", dp_axis="data", wd_period=0.5)
+            comm="apex", dp_axis="data", fault_mode="reroute",
+            wd_period=0.5)
         tr = Trainer(cfg, tcfg, mesh=mesh)
-        print(f"[fabric] torus dims={tr.torus.dims}, "
-              f"comm=apex (explicit torus ring collectives)")
+        print(f"[fabric] torus dims={tr.torus.dims}, comm=apex "
+              f"(CollectiveSchedule-lowered torus ring collectives)")
+        print(f"[fabric] predicted grad-sync: "
+              f"{tr.predicted_comm_s * 1e3:.2f} ms/step")
 
         def fault_hook(i):
-            if i == 6:
+            if i == 2:
+                print("[fault]  cutting link (2,3) ...")
+                tr.lofamo.kill_link(2, 3)
+            if i == 8:
                 print("[fault]  killing node 5 (host+NIC) ...")
                 tr.lofamo.kill_node(5)
 
-        metrics = tr.train(14, fault_hook=fault_hook)
+        metrics = tr.train(16, fault_hook=fault_hook)
         losses = [m["loss"] for m in metrics]
         print(f"[train]  losses: {losses[0]:.3f} ... {losses[-1]:.3f}")
         assert all(np.isfinite(x) for x in losses)
         print("[events]")
         for e in tr.events:
             print("   ", e)
+        # link fault -> reroute, no restart
+        assert any("rerouted collectives" in e for e in tr.events), \
+            "link reroute expected"
+        # node fault -> elastic re-mesh
         assert any("re-mesh" in e for e in tr.events), "re-mesh expected"
         assert tr.mesh.devices.size == 4
+        # predicted vs measured communication for the last step
+        last = metrics[-1]
+        print(f"[cost]   predicted comm {last['predicted_comm_s'] * 1e3:.2f}"
+              f" ms vs measured step {last['step_time_s'] * 1e3:.1f} ms")
         # LO|FA|MO awareness-time model at this watchdog period
         from repro.core.lofamo import awareness_time_model
         print(f"[lofamo] Ta(WD=500ms) = {awareness_time_model(0.5):.2f} s "
               "(paper: 0.9 s)")
-    print("fault-tolerant training OK (8 -> 4 devices, training continued)")
+    print("fault-tolerant training OK "
+          "(link rerouted, then 8 -> 4 devices, training continued)")
 
 
 if __name__ == "__main__":

@@ -19,7 +19,7 @@ import numpy as np  # noqa: E402
 import jax  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.core import apelink, collectives as C, rdma  # noqa: E402
+from repro.core import apelink, collectives as C, jaxcompat, rdma  # noqa: E402
 from repro.core.lofamo import awareness_time_model  # noqa: E402
 from repro.core.topology import Torus  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
@@ -37,7 +37,7 @@ def main() -> None:
     # --- RDMA put over a mesh axis -------------------------------------------
     mesh = make_mesh((8,), ("x",))
     x = np.arange(8 * 3, dtype=np.float32).reshape(8, 3)
-    shifted = jax.jit(jax.shard_map(
+    shifted = jax.jit(jaxcompat.shard_map(
         lambda v: rdma.put_shift(v[0], "x", +1)[None],
         mesh=mesh, in_specs=(P("x"),), out_specs=P("x")))(x)
     print("rdma.put_shift(+1) moved every rank's row to its +X neighbour:",

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 CI: install the package (editable, offline-safe) + dev deps where
+# the index is reachable, then run the tier-1 test command and the fabric
+# cost-model benchmark gate.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# Editable install makes `import repro` work without PYTHONPATH; keep the
+# PYTHONPATH fallback so the script also works where pip cannot write.
+pip install -e . --no-deps --no-build-isolation -q 2>/dev/null \
+    || echo "[ci] editable install unavailable; falling back to PYTHONPATH"
+# dev extras (hypothesis property tests) are best-effort: tier-1 collects
+# cleanly without them via pytest.importorskip
+pip install -q pytest hypothesis 2>/dev/null \
+    || echo "[ci] dev extras unavailable offline; property tests skipped"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "[ci] tier-1 tests"
+python -m pytest -x -q
+
+echo "[ci] fabric cost-model benchmark gate"
+python -m benchmarks.run fabric_cost
+
+echo "[ci] OK"

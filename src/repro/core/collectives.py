@@ -1,27 +1,33 @@
-"""Torus collectives — the APEnet+ fabric expressed in shard_map + ppermute.
+"""Torus collectives — thin lowering wrappers over ``core.fabric``.
 
 APEnet+ moves data exclusively over first-neighbour torus links with
 dimension-ordered routing (§1), and hides latency by keeping *two* DMA
 engines per link in flight (§2.1, Fig 1: ~40% total-time reduction).  On a
 TPU pod the ICI fabric has the same shape, and ``lax.ppermute`` *is* the
-neighbour RDMA-put.  This module implements the collective layer a trainer
-needs on such a fabric:
+neighbour RDMA-put.
+
+Since the fabric refactor every collective here is *lowered* to an explicit
+``fabric.CollectiveSchedule`` (which hop moves which bytes when) and then
+executed by ``fabric.execute`` — the same schedule object the cost
+estimator prices and the LO|FA|MO fault rewriter detours.  Each function
+accepts an optional pre-lowered ``schedule`` (e.g. a fault-rewritten one);
+without it the schedule is lowered on the fly against the ring implied by
+the bound mesh axis.
+
+The collective set a trainer needs on this fabric:
 
   * ``ring_reduce_scatter`` / ``ring_all_gather`` / ``ring_all_reduce`` —
     k-ary ring algorithms along one named mesh axis, built purely from
     neighbour ppermutes;
-
-  * **bidirectional** variants (default) — each step ships two half-chunks
-    in opposite directions over the full-duplex links; this is the "dual DMA
-    engine" idea: 2x link utilisation, ~2x fewer bytes per direction;
-
+  * **bidirectional** variants (default) — each round ships two half-chunks
+    in opposite directions over the full-duplex links, fused into a single
+    loop (the "dual DMA engine" idea: 2x link utilisation, half the
+    sequential rounds);
   * multi-axis, **dimension-ordered** wrappers — reduce-scatter along X,
     then Y, then Z, and all-gather back in reverse order: the collective
     analogue of APEnet+'s X->Y->Z router policy;
-
   * ``ring_all_to_all`` — store-and-forward ring all-to-all (MoE dispatch
     on the torus) plus a direct XLA ``lax.all_to_all`` fast path;
-
   * ``halo_exchange`` — the one-sided neighbour put used by stencil demos
     and the LO|FA|MO status exchange.
 
@@ -34,37 +40,24 @@ precision (bf16/fp16), matching production all-reduce behaviour.
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import fabric, jaxcompat
+from repro.core.fabric import CollectiveSchedule
+# Re-exported executor helpers: the implementations (and all ring/hop math)
+# live in core/fabric; these names are long-standing public API here.
+from repro.core.fabric.execute import (_acc_dtype, _flatten_pad,  # noqa: F401
+                                       _ring_perms)
+from repro.core.topology import Torus
 
 
-# ----------------------------------------------------------------------------
-# helpers
-# ----------------------------------------------------------------------------
-
-def _ring_perms(axis_size: int, step: int) -> list[tuple[int, int]]:
-    """ppermute perm for a one-hop shift (+1 = "clockwise") along a ring."""
-    return [(i, (i + step) % axis_size) for i in range(axis_size)]
-
-
-def _acc_dtype(dtype: jnp.dtype) -> jnp.dtype:
-    if jnp.issubdtype(dtype, jnp.floating) and jnp.finfo(dtype).bits < 32:
-        return jnp.float32
-    return dtype
-
-
-def _flatten_pad(x: jax.Array, n: int) -> tuple[jax.Array, int]:
-    """Flatten to 1D and zero-pad so the length divides ``n``."""
-    flat = x.reshape(-1)
-    pad = (-flat.size) % n
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    return flat, flat.size // n
+def _axis_torus(axis_names: Sequence[str]) -> Torus:
+    """The ring/torus implied by the bound mesh axes (trace-time static)."""
+    return Torus(tuple(jaxcompat.axis_size(ax) for ax in axis_names))
 
 
 # ----------------------------------------------------------------------------
@@ -72,108 +65,46 @@ def _flatten_pad(x: jax.Array, n: int) -> tuple[jax.Array, int]:
 # ----------------------------------------------------------------------------
 
 def ring_reduce_scatter(x: jax.Array, axis_name: str, *,
-                        bidirectional: bool = True,
-                        mean: bool = False) -> jax.Array:
-    """Reduce-scatter along a mesh-axis ring; rank r returns chunk r.
+                        bidirectional: bool = True, mean: bool = False,
+                        schedule: CollectiveSchedule | None = None
+                        ) -> jax.Array:
+    """Reduce-scatter along a mesh-axis ring; ring slot r returns chunk r.
 
     Input: the full local array (same logical value on every rank is NOT
     required — this reduces across ranks elementwise, like psum, then
     scatters).  Output: flat fp32-accumulated chunk of size ceil(|x|/N)
     (zero-padded); see ``ring_all_reduce`` for the unpadded composite.
     """
-    n = lax.axis_size(axis_name)
-    r = lax.axis_index(axis_name)
-    flat, chunk = _flatten_pad(x, n)
-    acc = flat.reshape(n, chunk).astype(_acc_dtype(x.dtype))
-
-    if n == 1:
-        return acc[0]
-
-    if not bidirectional:
-        return _rs_oneway(acc, axis_name, n, r, step=+1, mean=mean)
-
-    # Dual-DMA: front half of every chunk rides the +1 ring, back half the
-    # -1 ring, concurrently.  Each direction moves chunk/2 per step.
-    half = chunk // 2
-    fwd = _rs_oneway(acc[:, :half], axis_name, n, r, step=+1, mean=mean)
-    bwd = _rs_oneway(acc[:, half:], axis_name, n, r, step=-1, mean=mean)
-    return jnp.concatenate([fwd, bwd], axis=0)
-
-
-def _rs_oneway(acc: jax.Array, axis_name: str, n: int, r: jax.Array, *,
-               step: int, mean: bool) -> jax.Array:
-    """One directed ring reduce-scatter over ``acc`` of shape (n, chunk).
-
-    After n-1 neighbour hops, rank r holds the fully-reduced chunk r.
-    Chunk schedule (direction +1): at loop step s, rank r sends the partial
-    for chunk (r - s - 1) mod n and receives/accumulates chunk
-    (r - s - 2) mod n; the final accumulated index is r itself.
-    """
-    perm = _ring_perms(n, step)
-
-    def body(s, acc):
-        # Walk chunk indices against the send direction.
-        send_idx = (r - step * (s + 1)) % n
-        recv_idx = (r - step * (s + 2)) % n
-        sent = lax.dynamic_index_in_dim(acc, send_idx, axis=0, keepdims=False)
-        got = lax.ppermute(sent, axis_name, perm)
-        cur = lax.dynamic_index_in_dim(acc, recv_idx, axis=0, keepdims=False)
-        return lax.dynamic_update_index_in_dim(acc, cur + got, recv_idx, axis=0)
-
-    acc = lax.fori_loop(0, n - 1, body, acc)
-    out = lax.dynamic_index_in_dim(acc, r, axis=0, keepdims=False)
-    return out / n if mean else out
+    if schedule is None:
+        schedule = fabric.lower_reduce_scatter(
+            _axis_torus((axis_name,)), (axis_name,),
+            bidirectional=bidirectional, mean=mean)
+    chunk, _ = fabric.execute_reduce_scatter(schedule, x)
+    return chunk
 
 
 def ring_all_gather(x: jax.Array, axis_name: str, *,
-                    bidirectional: bool = True) -> jax.Array:
-    """All-gather chunks along a ring: rank r contributes x, returns the
-    concatenation ordered by rank, shape (n, *x.shape)."""
-    n = lax.axis_size(axis_name)
-    r = lax.axis_index(axis_name)
-    if n == 1:
-        return x[None]
-
-    if bidirectional:
-        flat = x.reshape(-1)
-        half = flat.size // 2
-        fwd = _ag_oneway(flat[:half], axis_name, n, r, step=+1)
-        bwd = _ag_oneway(flat[half:], axis_name, n, r, step=-1)
-        return jnp.concatenate([fwd, bwd], axis=-1).reshape((n,) + x.shape)
-    return _ag_oneway(x.reshape(-1), axis_name, n, r,
-                      step=+1).reshape((n,) + x.shape)
-
-
-def _ag_oneway(x: jax.Array, axis_name: str, n: int, r: jax.Array, *,
-               step: int) -> jax.Array:
-    """Directed ring all-gather of 1D ``x``; returns (n, |x|) rank-ordered."""
-    perm = _ring_perms(n, step)
-    out = jnp.zeros((n,) + x.shape, x.dtype)
-    out = lax.dynamic_update_index_in_dim(out, x, r, axis=0)
-
-    def body(s, carry):
-        out, cur = carry
-        cur = lax.ppermute(cur, axis_name, perm)
-        src = (r - step * (s + 1)) % n
-        out = lax.dynamic_update_index_in_dim(out, cur, src, axis=0)
-        return out, cur
-
-    out, _ = lax.fori_loop(0, n - 1, body, (out, x))
-    return out
+                    bidirectional: bool = True,
+                    schedule: CollectiveSchedule | None = None) -> jax.Array:
+    """All-gather chunks along a ring: slot r contributes x, returns the
+    concatenation ordered by ring slot, shape (n, *x.shape)."""
+    if schedule is None:
+        schedule = fabric.lower_all_gather(
+            _axis_torus((axis_name,)), (axis_name,),
+            bidirectional=bidirectional)
+    return fabric.execute_all_gather(schedule, x)
 
 
 def ring_all_reduce(x: jax.Array, axis_name: str, *,
-                    bidirectional: bool = True,
-                    mean: bool = False) -> jax.Array:
+                    bidirectional: bool = True, mean: bool = False,
+                    schedule: CollectiveSchedule | None = None) -> jax.Array:
     """Ring all-reduce = reduce-scatter + all-gather (the classic 2(N-1)/N
     bytes-optimal schedule), preserving ``x``'s shape/dtype."""
-    n = lax.axis_size(axis_name)
-    if n == 1:
-        return x
-    chunk = ring_reduce_scatter(x, axis_name, bidirectional=bidirectional,
-                                mean=mean)
-    full = ring_all_gather(chunk, axis_name, bidirectional=bidirectional)
-    return full.reshape(-1)[: x.size].reshape(x.shape).astype(x.dtype)
+    if schedule is None:
+        schedule = fabric.lower_all_reduce(
+            _axis_torus((axis_name,)), (axis_name,),
+            bidirectional=bidirectional, mean=mean)
+    return fabric.execute_all_reduce(schedule, x)
 
 
 # ----------------------------------------------------------------------------
@@ -181,62 +112,55 @@ def ring_all_reduce(x: jax.Array, axis_name: str, *,
 # ----------------------------------------------------------------------------
 
 def dim_ordered_all_reduce(x: jax.Array, axis_names: Sequence[str], *,
-                           bidirectional: bool = True,
-                           mean: bool = False) -> jax.Array:
+                           bidirectional: bool = True, mean: bool = False,
+                           schedule: CollectiveSchedule | None = None
+                           ) -> jax.Array:
     """All-reduce over several mesh axes: reduce-scatter X,Y,...,Z then
     all-gather Z,...,Y,X.  Each phase only ever talks to first neighbours
     along one torus dimension — the collective analogue of dimension-ordered
     routing, and bytes-optimal on a torus (each axis moves 2(Ni-1)/Ni of the
     data it still owns)."""
-    if len(axis_names) == 1:
-        return ring_all_reduce(x, axis_names[0], bidirectional=bidirectional,
-                               mean=mean)
-    # RS phase, X -> Z; each axis reduces and keeps 1/Ni of the working set.
-    # Padding introduced at each stage is recorded so the AG phase (Z -> X)
-    # can strip it as it reassembles — otherwise pad zeros would interleave
-    # with payload in the final concatenation.
-    work = x.reshape(-1)
-    stage_sizes: list[int] = []
-    for ax in axis_names:
-        stage_sizes.append(work.size)
-        work = ring_reduce_scatter(work, ax, bidirectional=bidirectional,
-                                   mean=mean)
-    for ax, size in zip(reversed(axis_names), reversed(stage_sizes)):
-        work = ring_all_gather(work, ax, bidirectional=bidirectional)
-        work = work.reshape(-1)[:size]
-    return work.reshape(x.shape).astype(x.dtype)
+    if schedule is None:
+        schedule = fabric.lower_all_reduce(
+            _axis_torus(axis_names), tuple(axis_names),
+            bidirectional=bidirectional, mean=mean)
+    return fabric.execute_all_reduce(schedule, x)
 
 
 def dim_ordered_reduce_scatter(x: jax.Array, axis_names: Sequence[str], *,
-                               bidirectional: bool = True,
-                               mean: bool = False) -> tuple[jax.Array, list[int]]:
+                               bidirectional: bool = True, mean: bool = False,
+                               schedule: CollectiveSchedule | None = None
+                               ) -> tuple[jax.Array, list[int]]:
     """Multi-axis RS; also returns per-stage pre-pad sizes for the inverse
     ``dim_ordered_all_gather`` (ZeRO-1 shard/unshard round trip)."""
-    work = x.reshape(-1)
-    stage_sizes: list[int] = []
-    for ax in axis_names:
-        stage_sizes.append(work.size)
-        work = ring_reduce_scatter(work, ax, bidirectional=bidirectional,
-                                   mean=mean)
-    return work, stage_sizes
+    if schedule is None:
+        schedule = fabric.lower_reduce_scatter(
+            _axis_torus(axis_names), tuple(axis_names),
+            bidirectional=bidirectional, mean=mean)
+    return fabric.execute_reduce_scatter(schedule, x)
 
 
 def dim_ordered_all_gather(x: jax.Array, axis_names: Sequence[str],
                            stage_sizes: Sequence[int], *,
-                           bidirectional: bool = True) -> jax.Array:
+                           bidirectional: bool = True,
+                           schedule: CollectiveSchedule | None = None
+                           ) -> jax.Array:
     """Inverse of ``dim_ordered_reduce_scatter`` given its stage sizes."""
-    work = x
-    for ax, size in zip(reversed(tuple(axis_names)), reversed(tuple(stage_sizes))):
-        work = ring_all_gather(work, ax, bidirectional=bidirectional)
-        work = work.reshape(-1)[:size]
-    return work
+    if schedule is None:
+        axes = tuple(reversed(tuple(axis_names)))
+        dims = tuple(reversed(range(len(axes))))
+        schedule = fabric.lower_all_gather(_axis_torus(axis_names), axes,
+                                           axis_dims=dims,
+                                           bidirectional=bidirectional)
+    return fabric.execute_all_gather(schedule, x, list(stage_sizes))
 
 
 # ----------------------------------------------------------------------------
 # all-to-all
 # ----------------------------------------------------------------------------
 
-def ring_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
+def ring_all_to_all(x: jax.Array, axis_name: str, *,
+                    schedule: CollectiveSchedule | None = None) -> jax.Array:
     """Store-and-forward ring all-to-all along one torus axis.
 
     ``x`` has shape (n, ...): row j is this rank's block destined for rank j.
@@ -245,27 +169,10 @@ def ring_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
     rank picks out its addressed row at each stop — exactly how a torus
     router forwards non-local packets.
     """
-    n = lax.axis_size(axis_name)
-    r = lax.axis_index(axis_name)
-    if x.shape[0] != n:
-        raise ValueError(f"leading dim {x.shape[0]} != axis size {n}")
-    if n == 1:
-        return x
-    perm = _ring_perms(n, +1)
-    out = jnp.zeros_like(x)
-    out = lax.dynamic_update_index_in_dim(
-        out, lax.dynamic_index_in_dim(x, r, 0, keepdims=False), r, axis=0)
-
-    def body(s, carry):
-        out, buf = carry
-        buf = lax.ppermute(buf, axis_name, perm)  # buf originated at r-s-1
-        src = (r - s - 1) % n
-        mine = lax.dynamic_index_in_dim(buf, r, 0, keepdims=False)
-        out = lax.dynamic_update_index_in_dim(out, mine, src, axis=0)
-        return out, buf
-
-    out, _ = lax.fori_loop(0, n - 1, body, (out, x))
-    return out
+    if schedule is None:
+        schedule = fabric.lower_all_to_all(_axis_torus((axis_name,)),
+                                           axis_name)
+    return fabric.execute_all_to_all(schedule, x)
 
 
 def fast_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
@@ -279,18 +186,18 @@ def fast_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
 # ----------------------------------------------------------------------------
 
 def halo_exchange(x: jax.Array, axis_name: str, halo: int = 1,
-                  dim: int = 0) -> tuple[jax.Array, jax.Array]:
+                  dim: int = 0, *,
+                  schedule: CollectiveSchedule | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
     """Exchange ``halo``-wide boundary slabs with both ring neighbours.
 
     Returns (from_prev, from_next): the neighbours' facing edges — a pair of
     one-sided RDMA puts in APEnet+ terms.
     """
-    n = lax.axis_size(axis_name)
-    lo = lax.slice_in_dim(x, 0, halo, axis=dim)
-    hi = lax.slice_in_dim(x, x.shape[dim] - halo, x.shape[dim], axis=dim)
-    from_prev = lax.ppermute(hi, axis_name, _ring_perms(n, +1))
-    from_next = lax.ppermute(lo, axis_name, _ring_perms(n, -1))
-    return from_prev, from_next
+    if schedule is None:
+        schedule = fabric.lower_halo_exchange(_axis_torus((axis_name,)),
+                                              axis_name)
+    return fabric.execute_halo_exchange(schedule, x, halo, dim)
 
 
 # ----------------------------------------------------------------------------
@@ -298,7 +205,8 @@ def halo_exchange(x: jax.Array, axis_name: str, halo: int = 1,
 # ----------------------------------------------------------------------------
 
 def make_stacked_all_reduce(mesh: Mesh, axis_names: Sequence[str], *,
-                            bidirectional: bool = True, mean: bool = False):
+                            bidirectional: bool = True, mean: bool = False,
+                            schedule: CollectiveSchedule | None = None):
     """Host-level all-reduce for tests/demos.
 
     Takes a global array of shape (n_0, ..., n_k, *payload) whose leading
@@ -312,19 +220,20 @@ def make_stacked_all_reduce(mesh: Mesh, axis_names: Sequence[str], *,
     def per_shard(x):
         y = x.reshape(x.shape[lead:])
         out = dim_ordered_all_reduce(y, axes, bidirectional=bidirectional,
-                                     mean=mean)
+                                     mean=mean, schedule=schedule)
         return out.reshape(x.shape)
 
     spec = P(*axes)
-    mapped = jax.shard_map(per_shard, mesh=mesh, in_specs=(spec,),
-                           out_specs=spec)
+    mapped = jaxcompat.shard_map(per_shard, mesh=mesh, in_specs=(spec,),
+                                 out_specs=spec)
     return jax.jit(mapped)
 
 
 def tree_all_reduce(tree, axis_names: Sequence[str], *,
-                    bidirectional: bool = True, mean: bool = True):
+                    bidirectional: bool = True, mean: bool = True,
+                    schedule: CollectiveSchedule | None = None):
     """Per-shard: all-reduce every leaf of a pytree (gradient sync)."""
     return jax.tree.map(
         lambda g: dim_ordered_all_reduce(g, axis_names,
                                          bidirectional=bidirectional,
-                                         mean=mean), tree)
+                                         mean=mean, schedule=schedule), tree)

@@ -1,0 +1,41 @@
+"""``repro.core.fabric`` — the collective fabric layer.
+
+One IR, three consumers:
+
+    lower(collective, Torus, axes)  ->  CollectiveSchedule
+        execute.*   the shard_map/ppermute program (fused dual-DMA rounds)
+        cost.*      predicted completion time (apelink.NetModel pricing)
+        fault.*     schedule rewritten around a LO|FA|MO fault map
+
+``core.collectives`` wraps the executor behind the familiar per-shard
+collective API; everything else (trainer, serving engine, benchmarks)
+consumes schedules directly.
+"""
+from repro.core.fabric.cost import (CostEstimate, algorithmic_bandwidth,
+                                    estimate, message_time)
+from repro.core.fabric.execute import (execute, execute_all_gather,
+                                       execute_all_reduce,
+                                       execute_all_to_all,
+                                       execute_halo_exchange,
+                                       execute_reduce_scatter, ring_slot)
+from repro.core.fabric.fault import (UnroutableError, fault_map_from_lofamo,
+                                     rewrite)
+from repro.core.fabric.lower import (axis_fault_penalty, live_ring, lower,
+                                     lower_all_gather, lower_all_reduce,
+                                     lower_all_to_all, lower_halo_exchange,
+                                     lower_reduce_scatter)
+from repro.core.fabric.schedule import (A2A, AG, AR, HALO, RS,
+                                        CollectiveSchedule, FaultMap, Phase,
+                                        Step, Transfer)
+
+__all__ = [
+    "A2A", "AG", "AR", "HALO", "RS",
+    "CollectiveSchedule", "FaultMap", "Phase", "Step", "Transfer",
+    "CostEstimate", "algorithmic_bandwidth", "estimate", "message_time",
+    "execute", "execute_all_gather", "execute_all_reduce",
+    "execute_all_to_all", "execute_halo_exchange", "execute_reduce_scatter",
+    "ring_slot", "UnroutableError", "fault_map_from_lofamo", "rewrite",
+    "axis_fault_penalty", "live_ring", "lower", "lower_all_gather",
+    "lower_all_reduce", "lower_all_to_all", "lower_halo_exchange",
+    "lower_reduce_scatter",
+]

@@ -1,0 +1,68 @@
+"""Schedule cost estimator — prices a ``CollectiveSchedule`` with the
+APElink analytic model (``core.apelink.NetModel``).
+
+One rule, applied uniformly: transfers inside a step ride disjoint link
+directions concurrently (full duplex / dual DMA), so a step costs the MAX
+of its transfers; steps are sequential rounds, so a schedule costs the SUM
+of its steps.  Every transfer is priced as one ``NetModel.latency`` message
+of ``frac * nbytes`` payload over its ``hops`` — the same model the paper's
+Fig 3 curves come from, now attached to every collective for free.
+
+This is the only place collective time is predicted; benchmarks and the
+runtime report *this* number against measured wall time.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.apelink import NetModel
+from repro.core.fabric.schedule import CollectiveSchedule
+
+
+@dataclasses.dataclass(frozen=True)
+class CostEstimate:
+    total_s: float
+    phase_s: tuple[float, ...]       # per-phase breakdown, lowering order
+    rounds: int                      # sequential ppermute rounds
+    bytes_per_rank: float            # payload bytes each rank injects
+    max_hops: int                    # worst detour in the schedule
+
+    def __str__(self) -> str:
+        return (f"{self.total_s * 1e6:.1f} us over {self.rounds} rounds "
+                f"({self.bytes_per_rank / 1e6:.3f} MB/rank, "
+                f"max {self.max_hops} hops)")
+
+
+def message_time(nbytes: int, net: NetModel | None = None, *,
+                 hops: int = 1, **endpoint_kw) -> float:
+    """Single fabric message (the unit every step price is built from)."""
+    net = net or NetModel()
+    return net.latency(max(int(nbytes), 1), hops=hops, **endpoint_kw)
+
+
+def estimate(schedule: CollectiveSchedule, nbytes: int,
+             net: NetModel | None = None, **endpoint_kw) -> CostEstimate:
+    """Predicted completion time for the collective on an ``nbytes`` input
+    (bytes of the per-rank input buffer, matching the transfers' ``frac``
+    base)."""
+    net = net or NetModel()
+    phase_s = []
+    for ph in schedule.phases:
+        t = 0.0
+        for st in ph.steps:
+            if st.transfers:
+                t += max(message_time(tr.frac * nbytes, net, hops=tr.hops,
+                                      **endpoint_kw)
+                         for tr in st.transfers)
+        phase_s.append(t)
+    return CostEstimate(total_s=sum(phase_s), phase_s=tuple(phase_s),
+                        rounds=schedule.rounds,
+                        bytes_per_rank=schedule.bytes_per_rank(nbytes),
+                        max_hops=schedule.max_hops)
+
+
+def algorithmic_bandwidth(schedule: CollectiveSchedule, nbytes: int,
+                          net: NetModel | None = None) -> float:
+    """Collective goodput: input bytes / predicted time (bytes/s)."""
+    t = estimate(schedule, nbytes, net).total_s
+    return nbytes / t if t > 0 else float("inf")

@@ -1,0 +1,300 @@
+"""Lowering: collective + ``Torus`` + axis spec -> ``CollectiveSchedule``.
+
+This is the single place in the repo where ring orderings, chunk fractions
+and physical hop counts are derived.  The executor, the cost estimator and
+the fault rewriter all consume the schedules produced here; none of them
+re-derives hop math.
+
+Lowering is fault-aware: given a ``FaultMap`` it
+
+  * drops dead axis positions from every ring ("shrunk rings" — a position
+    is dead when any rank in its hyperplane is dead, exact for 1D meshes
+    and conservative for wider ones, since one ppermute perm is shared by
+    every lane of the axis);
+  * prices each surviving (src, dst) pair by BFS over the surviving fabric
+    graph, so a transfer whose direct link died carries ``hops > 1`` — the
+    dimension-ordered router's detour around the failure.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from typing import Sequence
+
+from repro.core.fabric.schedule import (
+    A2A, AG, AR, HALO, RS, CollectiveSchedule, FaultMap, Phase, Step,
+    Transfer)
+from repro.core.topology import Torus
+
+
+class UnroutableError(RuntimeError):
+    """The fault map partitions the fabric: no detour exists."""
+
+
+# ----------------------------------------------------------------------------
+# fabric graph helpers (the only hop math in the repo)
+# ----------------------------------------------------------------------------
+
+def _bfs_hops(torus: Torus, src: int, dst: int, faults: FaultMap) -> int | None:
+    """Shortest surviving-path length between two live ranks, else None."""
+    if src == dst:
+        return 0
+    seen = {src}
+    frontier = deque([(src, 0)])
+    while frontier:
+        r, d = frontier.popleft()
+        for n in torus.neighbors(r):
+            if n in seen or not faults.link_ok(r, n):
+                continue
+            if n == dst:
+                return d + 1
+            seen.add(n)
+            frontier.append((n, d + 1))
+    return None
+
+
+def _lanes(torus: Torus, dim: int):
+    """All coordinate assignments of the dims orthogonal to ``dim``."""
+    ranges = [range(torus.dims[i]) if i != dim else (None,)
+              for i in range(torus.ndims)]
+    return itertools.product(*ranges)
+
+
+def _pair_hops(torus: Torus, dim: int, a: int, b: int,
+               faults: FaultMap) -> int:
+    """Physical hops for an axis-position pair a -> b, worst lane wins."""
+    n = torus.dims[dim]
+    if not faults:
+        delta = abs(a - b)
+        return max(1, min(delta, n - delta))
+    worst = 0
+    routable_lane = False
+    for lane in _lanes(torus, dim):
+        ca = tuple(a if c is None else c for c in lane)
+        cb = tuple(b if c is None else c for c in lane)
+        ra, rb = torus.rank(ca), torus.rank(cb)
+        if ra in faults.dead_nodes or rb in faults.dead_nodes:
+            continue  # a dead endpoint's lane carries no live payload
+        hops = _bfs_hops(torus, ra, rb, faults)
+        if hops is None:
+            raise UnroutableError(
+                f"no surviving route {ca} -> {cb} (dim {dim})")
+        routable_lane = True
+        worst = max(worst, hops)
+    if not routable_lane:
+        raise UnroutableError(
+            f"every lane of axis positions {a} -> {b} (dim {dim}) is dead")
+    return max(1, worst)
+
+
+def live_ring(torus: Torus, dim: int, faults: FaultMap) -> tuple[int, ...]:
+    """Participating axis positions in cyclic order (shrunk under faults)."""
+    dead = {torus.coords(r)[dim] for r in faults.dead_nodes}
+    ring = tuple(p for p in range(torus.dims[dim]) if p not in dead)
+    if not ring:
+        raise UnroutableError(f"all positions of dim {dim} are dead")
+    return ring
+
+
+def axis_fault_penalty(torus: Torus, dim: int,
+                       faults: FaultMap) -> tuple[int, int]:
+    """(max detour hops, dead positions) for one axis — the fault rewriter's
+    axis-ordering key."""
+    ring = live_ring(torus, dim, faults)
+    m = len(ring)
+    if m <= 1:
+        return (0, torus.dims[dim] - m)
+    worst = max(_pair_hops(torus, dim, ring[i], ring[(i + 1) % m], faults)
+                for i in range(m))
+    return (worst, torus.dims[dim] - m)
+
+
+# ----------------------------------------------------------------------------
+# phase construction
+# ----------------------------------------------------------------------------
+
+def _dir_transfer(torus: Torus, dim: int, ring: tuple[int, ...], sgn: int,
+                  frac: float, faults: FaultMap, combine: str) -> Transfer:
+    m = len(ring)
+    perm = tuple((ring[i], ring[(i + sgn) % m]) for i in range(m))
+    hops = max(_pair_hops(torus, dim, s, d, faults) for s, d in perm)
+    return Transfer(perm=perm, frac=frac, hops=hops, combine=combine)
+
+
+def _ring_phase(kind: str, torus: Torus, axis: str, dim: int, *,
+                scale: float, bidirectional: bool, faults: FaultMap,
+                frac_per_dir: float, combine: str,
+                mean: bool = False) -> Phase:
+    ring = live_ring(torus, dim, faults)
+    m = len(ring)
+    if m <= 1:
+        return Phase(kind, axis, ring, steps=(), scale=scale, mean=mean)
+    sgns = (+1, -1) if bidirectional else (+1,)
+    transfers = tuple(_dir_transfer(torus, dim, ring, sgn, frac_per_dir,
+                                    faults, combine) for sgn in sgns)
+    steps = tuple(Step(transfers) for _ in range(m - 1))
+    return Phase(kind, axis, ring, steps, scale=scale, mean=mean)
+
+
+def _entries(torus: Torus, axes: Sequence[str],
+             axis_dims: Sequence[int] | None) -> list[tuple[str, int]]:
+    axes = tuple(axes)
+    dims = tuple(axis_dims) if axis_dims is not None else tuple(
+        range(len(axes)))
+    if len(axes) != len(dims):
+        raise ValueError("axes/axis_dims arity mismatch")
+    if not axes:
+        raise ValueError("need at least one axis")
+    for d in dims:
+        if not 0 <= d < torus.ndims:
+            raise ValueError(f"axis dim {d} out of range for {torus.dims}")
+    if len(set(dims)) != len(dims):
+        raise ValueError(f"repeated torus dims {dims}")
+    return list(zip(axes, dims))
+
+
+# ----------------------------------------------------------------------------
+# public lowerings
+# ----------------------------------------------------------------------------
+
+def lower_reduce_scatter(torus: Torus, axes: Sequence[str], *,
+                         axis_dims: Sequence[int] | None = None,
+                         bidirectional: bool = True, mean: bool = False,
+                         faults: FaultMap | None = None) -> CollectiveSchedule:
+    """Dimension-ordered reduce-scatter: one ring pass per axis, the working
+    set shrinking by the (live) ring size at every phase."""
+    faults = faults or FaultMap()
+    entries = _entries(torus, axes, axis_dims)
+    phases, scale = [], 1.0
+    for name, dim in entries:
+        m = len(live_ring(torus, dim, faults))
+        ndir = 2 if (bidirectional and m > 1) else 1
+        ph = _ring_phase(RS, torus, name, dim, scale=scale,
+                         bidirectional=bidirectional, faults=faults,
+                         frac_per_dir=scale / (max(m, 1) * ndir),
+                         combine="sum", mean=mean)
+        phases.append(ph)
+        scale /= max(m, 1)
+    return CollectiveSchedule(RS, tuple(a for a, _ in entries),
+                              tuple(d for _, d in entries), torus.dims,
+                              tuple(phases), faults, bidirectional, mean)
+
+
+def lower_all_gather(torus: Torus, axes: Sequence[str], *,
+                     axis_dims: Sequence[int] | None = None,
+                     bidirectional: bool = True,
+                     faults: FaultMap | None = None) -> CollectiveSchedule:
+    """All-gather, walking ``axes`` in the given order (callers inverting a
+    reduce-scatter pass the reversed axis list); fractions are relative to
+    the *input chunk* at each rank, which grows by the ring size per phase."""
+    faults = faults or FaultMap()
+    entries = _entries(torus, axes, axis_dims)
+    phases, scale = [], 1.0
+    for name, dim in entries:
+        m = len(live_ring(torus, dim, faults))
+        ndir = 2 if (bidirectional and m > 1) else 1
+        ph = _ring_phase(AG, torus, name, dim, scale=scale,
+                         bidirectional=bidirectional, faults=faults,
+                         frac_per_dir=scale / ndir, combine="write")
+        phases.append(ph)
+        scale *= max(m, 1)
+    return CollectiveSchedule(AG, tuple(a for a, _ in entries),
+                              tuple(d for _, d in entries), torus.dims,
+                              tuple(phases), faults, bidirectional, False)
+
+
+def lower_all_reduce(torus: Torus, axes: Sequence[str], *,
+                     axis_dims: Sequence[int] | None = None,
+                     bidirectional: bool = True, mean: bool = False,
+                     faults: FaultMap | None = None) -> CollectiveSchedule:
+    """The bytes-optimal torus all-reduce: reduce-scatter X,Y,..,Z then
+    all-gather Z,..,Y,X — 2(Ni-1)/Ni of the live working set per axis, all
+    of it first-neighbour traffic (APEnet+ dimension-ordered routing)."""
+    faults = faults or FaultMap()
+    entries = _entries(torus, axes, axis_dims)
+    phases, scale = [], 1.0
+    for name, dim in entries:
+        m = len(live_ring(torus, dim, faults))
+        ndir = 2 if (bidirectional and m > 1) else 1
+        phases.append(_ring_phase(
+            RS, torus, name, dim, scale=scale, bidirectional=bidirectional,
+            faults=faults, frac_per_dir=scale / (max(m, 1) * ndir),
+            combine="sum", mean=mean))
+        scale /= max(m, 1)
+    for name, dim in reversed(entries):
+        m = len(live_ring(torus, dim, faults))
+        ndir = 2 if (bidirectional and m > 1) else 1
+        phases.append(_ring_phase(
+            AG, torus, name, dim, scale=scale, bidirectional=bidirectional,
+            faults=faults, frac_per_dir=scale / ndir, combine="write"))
+        scale *= max(m, 1)
+    return CollectiveSchedule(AR, tuple(a for a, _ in entries),
+                              tuple(d for _, d in entries), torus.dims,
+                              tuple(phases), faults, bidirectional, mean)
+
+
+def lower_all_to_all(torus: Torus, axis: str, *,
+                     axis_dims: Sequence[int] | None = None,
+                     faults: FaultMap | None = None) -> CollectiveSchedule:
+    """Store-and-forward ring all-to-all: the full buffer circulates n-1
+    hops, every rank peeling off its addressed row at each stop — how the
+    torus router forwards non-local packets.  Node faults are unroutable
+    (rows addressed to a dead rank have nowhere to land); link faults only
+    raise the hop count."""
+    faults = faults or FaultMap()
+    [(name, dim)] = _entries(torus, (axis,), axis_dims)
+    ring = live_ring(torus, dim, faults)
+    n = torus.dims[dim]
+    if len(ring) != n:
+        raise UnroutableError(
+            "all-to-all cannot shrink its ring: rows addressed to dead "
+            f"positions {sorted(set(range(n)) - set(ring))} are undeliverable")
+    if n == 1:
+        steps: tuple[Step, ...] = ()
+    else:
+        tr = _dir_transfer(torus, dim, ring, +1, 1.0, faults, "shift")
+        steps = tuple(Step((tr,)) for _ in range(n - 1))
+    return CollectiveSchedule(
+        A2A, (name,), (dim,), torus.dims,
+        (Phase(A2A, name, ring, steps),), faults, False, False)
+
+
+def lower_halo_exchange(torus: Torus, axis: str, *,
+                        axis_dims: Sequence[int] | None = None,
+                        faults: FaultMap | None = None) -> CollectiveSchedule:
+    """One round, both directions: each rank puts its facing slab into both
+    ring neighbours (a pair of one-sided RDMA puts).  Under faults the ring
+    shrinks, so live ranks exchange halos with their nearest live
+    neighbours at the detour's hop cost."""
+    faults = faults or FaultMap()
+    [(name, dim)] = _entries(torus, (axis,), axis_dims)
+    ring = live_ring(torus, dim, faults)
+    if len(ring) <= 1:
+        phase = Phase(HALO, name, ring, steps=())
+    else:
+        transfers = tuple(_dir_transfer(torus, dim, ring, sgn, 1.0, faults,
+                                        "write") for sgn in (+1, -1))
+        phase = Phase(HALO, name, ring, (Step(transfers),))
+    return CollectiveSchedule(HALO, (name,), (dim,), torus.dims, (phase,),
+                              faults, True, False)
+
+
+_LOWERERS = {
+    RS: lower_reduce_scatter,
+    AG: lower_all_gather,
+    AR: lower_all_reduce,
+}
+
+
+def lower(collective: str, torus: Torus, axes: Sequence[str],
+          **kw) -> CollectiveSchedule:
+    """Generic entry point; see the per-collective lowerings."""
+    if collective in _LOWERERS:
+        return _LOWERERS[collective](torus, axes, **kw)
+    if collective in (A2A, HALO):
+        axes = tuple(axes)
+        if len(axes) != 1:
+            raise ValueError(f"{collective} is single-axis, got {axes}")
+        fn = lower_all_to_all if collective == A2A else lower_halo_exchange
+        return fn(torus, axes[0], **kw)
+    raise ValueError(f"unknown collective {collective!r}")

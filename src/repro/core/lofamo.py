@@ -42,6 +42,7 @@ class Health(enum.Enum):
     OK = 0
     HOST_FAULT = 1    # host stopped updating its watchdog register
     NODE_FAULT = 2    # whole node (NIC included) unreachable
+    LINK_FAULT = 3    # a torus link died; both endpoints still alive
 
 
 @dataclasses.dataclass
@@ -73,6 +74,20 @@ class FaultEvent:
         return self.t_master - self.t_fault
 
 
+@dataclasses.dataclass
+class LinkFaultEvent:
+    pair: tuple[int, int]          # undirected link (lo, hi)
+    t_fault: float
+    t_master: float | None = None  # master classifies the pair as LINK_FAULT
+    kind: Health = Health.LINK_FAULT
+
+    @property
+    def awareness_time(self) -> float | None:
+        if self.t_master is None:
+            return None
+        return self.t_master - self.t_fault
+
+
 class LofamoSim:
     """Discrete-time simulation of LO|FA|MO over a torus."""
 
@@ -88,9 +103,13 @@ class LofamoSim:
                                             for n in torus.neighbors(r)}
         self.host_dead: set[int] = set()
         self.node_dead: set[int] = set()
+        self.link_dead: set[tuple[int, int]] = set()
         self.events: list[FaultEvent] = []
+        self.link_events: list[LinkFaultEvent] = []
         self.master_view: dict[int, Health] = {r: Health.OK
                                                for r in torus.all_ranks()}
+        # link faults the master has inferred: (lo, hi) -> awareness time
+        self.master_links: dict[tuple[int, int], float] = {}
         self.t = 0.0
 
     # -- fault injection -------------------------------------------------------
@@ -108,6 +127,26 @@ class LofamoSim:
         self.node_dead.add(rank)
         self.events.append(ev)
         return ev
+
+    def kill_link(self, a: int, b: int) -> tuple[int, int]:
+        """One torus link dies; both endpoint nodes stay alive.
+
+        Locally each endpoint's NIC stops receiving the other's status word
+        and suspects a NODE_FAULT; the master disambiguates (companion work
+        on APEnet+ fault awareness): a suspected node that itself keeps
+        reporting over the service network is alive, so the fault must be
+        the link between the pair.
+        """
+        if b not in self.torus.neighbors(a):
+            raise ValueError(f"{a} and {b} are not torus neighbours")
+        pair = (min(a, b), max(a, b))
+        self.link_dead.add(pair)
+        ev = LinkFaultEvent(pair, self.t)
+        self.link_events.append(ev)
+        return ev
+
+    def _link_ok(self, a: int, b: int) -> bool:
+        return (min(a, b), max(a, b)) not in self.link_dead
 
     # -- one watchdog period ---------------------------------------------------
     def step(self) -> None:
@@ -139,7 +178,9 @@ class LofamoSim:
             if r in self.node_dead:
                 continue
             for n in self.torus.neighbors(r):
-                if n in self.node_dead:
+                if n in self.node_dead or not self._link_ok(r, n):
+                    # no status word arrives: locally indistinguishable from
+                    # a dead neighbour node
                     if reg.neighbor_status.get(n) is not Health.NODE_FAULT:
                         reg.neighbor_status[n] = Health.NODE_FAULT
                         self._mark_local(n, t_end)
@@ -147,17 +188,29 @@ class LofamoSim:
                     st = self.regs[n].self_status
                     reg.neighbor_status[n] = st
         # Phase 4: live hosts read NIC registers and report to the master
-        # over the service network.
+        # over the service network (plus a liveness heartbeat).  The master
+        # disambiguates: a NODE_FAULT suspicion about a rank whose own host
+        # still heartbeats must be the *link* between the pair.
+        alive_hosts = {r for r in self.regs if r not in self.host_dead}
         for r, reg in self.regs.items():
             if r in self.host_dead:
                 continue
-            reports: dict[int, Health] = {}
+            reports: list[tuple[int, Health]] = []
             if reg.self_status is not Health.OK:
-                reports[r] = reg.self_status
+                reports.append((r, reg.self_status))
             for n, st in reg.neighbor_status.items():
                 if st is not Health.OK:
-                    reports[n] = st
-            for rank, st in reports.items():
+                    reports.append((n, st))
+            for rank, st in reports:
+                if st is Health.NODE_FAULT and rank in alive_hosts \
+                        and rank != r:
+                    pair = (min(r, rank), max(r, rank))
+                    if pair not in self.master_links:
+                        self.master_links[pair] = t_end + self.service_latency
+                        for ev in self.link_events:
+                            if ev.pair == pair and ev.t_master is None:
+                                ev.t_master = self.master_links[pair]
+                    continue
                 if self.master_view.get(rank) is Health.OK:
                     self.master_view[rank] = st
                     self._mark_master(rank, t_end + self.service_latency)
@@ -181,6 +234,10 @@ class LofamoSim:
     # -- queries ---------------------------------------------------------------
     def detected_at_master(self) -> set[int]:
         return {r for r, st in self.master_view.items() if st is not Health.OK}
+
+    def detected_links_at_master(self) -> set[tuple[int, int]]:
+        """Dead links the master has inferred (both endpoints still alive)."""
+        return set(self.master_links)
 
     def all_detected(self, faults: Iterable[int] | None = None) -> bool:
         want = set(faults) if faults is not None else {e.rank for e in self.events}

@@ -23,6 +23,8 @@ from typing import Literal
 
 import jax
 
+from repro.core import jaxcompat
+
 from repro.kernels import flash_attention as _fa
 from repro.kernels import mamba2_scan as _m2
 from repro.kernels import paged_attention as _pa
@@ -103,8 +105,8 @@ def sharded_flash_attention(mesh, *, data_axes=("data",), model_axis="model",
     spec = P(tuple(data_axes), model_axis, None, None)
 
     fn = functools.partial(flash_attention, **kw)
-    return jax.shard_map(lambda q, k, v: fn(q, k, v), mesh=mesh,
-                         in_specs=(spec, spec, spec), out_specs=spec)
+    return jaxcompat.shard_map(lambda q, k, v: fn(q, k, v), mesh=mesh,
+                               in_specs=(spec, spec, spec), out_specs=spec)
 
 
 def sharded_paged_attention(mesh, *, data_axes=("data",), model_axis="model",
@@ -116,6 +118,6 @@ def sharded_paged_attention(mesh, *, data_axes=("data",), model_axis="model",
     lspec = P(tuple(data_axes))
 
     fn = functools.partial(paged_attention, **kw)
-    return jax.shard_map(
+    return jaxcompat.shard_map(
         lambda q, kp, vp, pt, sl: fn(q, kp, vp, pt, sl), mesh=mesh,
         in_specs=(qspec, kvspec, kvspec, tspec, lspec), out_specs=qspec)

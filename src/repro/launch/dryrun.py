@@ -345,6 +345,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
         sharding.set_runtime_mesh(None)
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older JAX returns [dict]
+        cost = cost[0] if cost else {}
     cost = {k: v for k, v in cost.items()
             if k in ("flops", "bytes accessed", "transcendentals",
                      "optimal_seconds")}

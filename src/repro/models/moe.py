@@ -20,6 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import jaxcompat
 from repro.models.common import ArchCfg, dense_init
 
 
@@ -193,7 +194,7 @@ def apply_moe_ep(cfg: ArchCfg, p, x):
     in_specs = (P(tuple(dpx), "model", None), P(), P("model", None, None),
                 P("model", None, None), P("model", None, None))
     out_specs = (P(tuple(dpx), "model", None), P())
-    mapped = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False)
+    mapped = jaxcompat.shard_map(local, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
     y, aux = mapped(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
     return y, jnp.mean(aux)

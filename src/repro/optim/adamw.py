@@ -109,9 +109,13 @@ def apex_zero1_init(params, dp: int):
 
 
 def apex_zero1_update(cfg: AdamWConfig, grads, state, params, *,
-                      axis_name: str):
+                      axis_name: str, rs_schedule=None, ag_schedule=None):
     """Per-shard code (inside shard_map).  grads/params are the full
-    (replicated w.r.t. the DP axis) values; moments are 1/N slices."""
+    (replicated w.r.t. the DP axis) values; moments are 1/N slices.
+
+    ``rs_schedule``/``ag_schedule`` are optional pre-lowered (possibly
+    fault-rewritten) ``fabric.CollectiveSchedule`` objects for the gradient
+    reduce-scatter and parameter all-gather."""
     from repro.core import collectives as C
 
     step = state["step"] + 1
@@ -126,13 +130,14 @@ def apex_zero1_update(cfg: AdamWConfig, grads, state, params, *,
     def upd(g, m, v, p):
         # mean gradient shard for this rank (ring reduce-scatter)
         gshard = C.ring_reduce_scatter(g.astype(jnp.float32), axis_name,
-                                       mean=True)
+                                       mean=True, schedule=rs_schedule)
         pflat = p.reshape(-1)
         m = b1 * m + (1 - b1) * gshard
         v = b2 * v + (1 - b2) * gshard * gshard
         delta = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
         # matching param shard
-        n = jax.lax.axis_size(axis_name)
+        from repro.core import jaxcompat
+        n = jaxcompat.axis_size(axis_name)
         chunk = m.shape[0]
         r = jax.lax.axis_index(axis_name)
         pshard = jax.lax.dynamic_slice(
@@ -142,7 +147,8 @@ def apex_zero1_update(cfg: AdamWConfig, grads, state, params, *,
             delta = delta + cfg.weight_decay * pshard
         new_shard = pshard - lr * delta
         # all-gather the updated parameter (bf16 on the wire)
-        full = C.ring_all_gather(new_shard.astype(p.dtype), axis_name)
+        full = C.ring_all_gather(new_shard.astype(p.dtype), axis_name,
+                                 schedule=ag_schedule)
         return full.reshape(-1)[: p.size].reshape(p.shape), m, v
 
     flat_p, treedef = jax.tree.flatten(params)

@@ -31,6 +31,8 @@ import numpy as np
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.jaxcompat import abstract_mesh  # noqa: F401  (re-export:
+# spec-level tests build device-less production meshes through here)
 from repro.models.common import ArchCfg
 
 STACKED_KEYS = {"layers", "mamba", "enc_layers", "dec_layers"}

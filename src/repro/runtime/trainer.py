@@ -34,6 +34,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointStore
 from repro.core import collectives as C
+from repro.core import fabric, jaxcompat
 from repro.core.lofamo import Health, LofamoSim
 from repro.core.topology import Torus
 from repro.data import SyntheticTokens, make_batch_arrays
@@ -61,6 +62,13 @@ class TrainerConfig:
     remat: bool = True
     comm: str = "gspmd"            # or "apex"
     dp_axis: str = "data"
+    # link-fault policy ("remesh" is the node-fault-only default: a dead
+    # link loses no state, so it is logged and routing is left to the
+    # runtime fabric); "reroute" (apex comm only) = rewrite the collective
+    # schedules around the dead link and keep training — no restart, no
+    # lost steps, just a higher predicted hop cost.  Node faults always
+    # checkpoint-restart on an elastically re-meshed machine.
+    fault_mode: str = "remesh"
     wd_period: float = 0.5          # LO|FA|MO watchdog period (seconds)
     straggler_factor: float = 3.0   # step slower than this x median -> flag
     seed: int = 0
@@ -93,6 +101,9 @@ class Trainer:
         self.torus = Torus(dims)
         self.lofamo = LofamoSim(self.torus, wd_period=tcfg.wd_period)
         self._handled_faults: set[int] = set()
+        self._handled_links: set[tuple[int, int]] = set()
+        self._fault_map = fabric.FaultMap()
+        self.predicted_comm_s: float | None = None
         self._build()
 
     # ------------------------------------------------------------------ build
@@ -190,39 +201,65 @@ class Trainer:
         self._step_fn = step_fn
         self.params, self.opt_state = params, opt_state
 
-    def _build_apex(self, key) -> None:
-        """Paper-faithful DP: shard_map + explicit torus ring collectives."""
-        cfg, tcfg, mesh = self.cfg, self.tcfg, self.mesh
+    # ------------------------------------------------------- apex (fabric)
+    def _apex_schedules(self) -> dict:
+        """Lower the apex step's collective schedules against the fabric
+        torus, rewritten around the currently known fault map."""
+        axis = self.tcfg.dp_axis
+        dp = self.mesh.shape[axis]
+        torus = self.torus if self.torus.dims == (dp,) else Torus((dp,))
+        scheds = {
+            "rs": fabric.lower_reduce_scatter(torus, (axis,), mean=True),
+            "ag": fabric.lower_all_gather(torus, (axis,)),
+            "loss": fabric.lower_all_reduce(torus, (axis,), mean=True),
+        }
+        if self._fault_map:
+            scheds = {k: fabric.rewrite(s, self._fault_map)
+                      for k, s in scheds.items()}
+        return scheds
+
+    def _predict_comm_s(self, scheds) -> float:
+        """Predicted per-step gradient-sync time: every leaf's fp32 grad
+        reduce-scatter plus updated-param all-gather, priced on the same
+        schedules the step executes (fabric cost model)."""
+        axis = self.tcfg.dp_axis
+        dp = self.mesh.shape[axis]
+        total = fabric.estimate(scheds["loss"], 4).total_s
+        for p in jax.tree.leaves(self.params):
+            chunk_bytes = -(-p.size // dp) * p.dtype.itemsize
+            total += fabric.estimate(scheds["rs"], 4 * p.size).total_s
+            total += fabric.estimate(scheds["ag"], chunk_bytes).total_s
+        return total
+
+    def _make_apex_step(self) -> None:
+        """(Re)build the jitted apex step from the current schedules."""
+        tcfg, mesh = self.tcfg, self.mesh
         axis = tcfg.dp_axis
-        dp = mesh.shape[axis]
-        self.params = self.model.init(key)   # replicated
         model, opt, remat = self.model, tcfg.opt, tcfg.remat
+        scheds = self._apex_schedules()
+        self.apex_schedules = scheds
+        self.predicted_comm_s = self._predict_comm_s(scheds)
 
         def per_shard(params, m, v, step, batch):
             loss, grads = jax.value_and_grad(
                 lambda p: model.train_loss(p, batch, remat=remat))(params)
             # mean loss across DP ranks over the torus ring
-            loss = C.ring_all_reduce(loss[None], axis, mean=True)[0]
+            loss = C.ring_all_reduce(loss[None], axis,
+                                     schedule=scheds["loss"])[0]
             state = {"m": m, "v": v, "step": step}
             params, state = apex_zero1_update(opt, grads, state, params,
-                                              axis_name=axis)
+                                              axis_name=axis,
+                                              rs_schedule=scheds["rs"],
+                                              ag_schedule=scheds["ag"])
             return params, state["m"], state["v"], state["step"], loss
 
         in_specs = (P(), P(axis), P(axis), P(), P(axis))
         out_specs = (P(), P(axis), P(axis), P(), P())
         # check_vma off: outputs ARE replicated (post all-gather), but the
         # ppermute chain hides that from the varying-axes checker.
-        mapped = jax.shard_map(per_shard, mesh=mesh, in_specs=in_specs,
-                               out_specs=out_specs, check_vma=False)
+        mapped = jaxcompat.shard_map(per_shard, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, check_vma=False)
         self._apex_step = jax.jit(mapped)
-        # global moment buffers: (dp * chunk,) per leaf
-        m = jax.tree.map(
-            lambda p: jnp.zeros((dp * (-(-p.size // dp)),), jnp.float32),
-            self.params)
-        self.opt_state = {"m": m, "v": jax.tree.map(jnp.copy, m),
-                          "step": jnp.zeros((), jnp.int32)}
-        self.batch_shardings = None
-        self._batch_spec = P(axis)
 
         def step_fn(params, opt_state, batch):
             params, m, v, step, loss = self._apex_step(
@@ -231,6 +268,22 @@ class Trainer:
             return params, {"m": m, "v": v, "step": step}, {"loss": loss}
 
         self._step_fn = step_fn
+
+    def _build_apex(self, key) -> None:
+        """Paper-faithful DP: shard_map + explicit torus ring collectives,
+        every collective lowered through the fabric's CollectiveSchedule."""
+        axis = self.tcfg.dp_axis
+        dp = self.mesh.shape[axis]
+        self.params = self.model.init(key)   # replicated
+        self._make_apex_step()
+        # global moment buffers: (dp * chunk,) per leaf
+        m = jax.tree.map(
+            lambda p: jnp.zeros((dp * (-(-p.size // dp)),), jnp.float32),
+            self.params)
+        self.opt_state = {"m": m, "v": jax.tree.map(jnp.copy, m),
+                          "step": jnp.zeros((), jnp.int32)}
+        self.batch_shardings = None
+        self._batch_spec = P(axis)
 
     @property
     def n_params(self) -> int:
@@ -281,6 +334,10 @@ class Trainer:
         metrics = {k: float(v) for k, v in metrics.items()}
         metrics["step_time_s"] = dt
         metrics["step"] = self.data.step
+        if self.predicted_comm_s is not None:
+            # fabric cost model vs wall clock: the schedule's predicted
+            # gradient-sync time for this step (APEnet+ NetModel pricing)
+            metrics["predicted_comm_s"] = self.predicted_comm_s
         # straggler detection: this step vs the running median
         if len(self._step_times) >= 5:
             med = float(np.median(self._step_times[-20:]))
@@ -312,6 +369,11 @@ class Trainer:
             if failed:
                 self._recover(failed)
                 self._handled_faults |= failed
+            links = (self.lofamo.detected_links_at_master()
+                     - self._handled_links)
+            if links:
+                self._handle_link_faults(links)
+                self._handled_links |= links
             out.append(self.train_step())
             if self.tcfg.ckpt_every and \
                     self.data.step % self.tcfg.ckpt_every == 0:
@@ -320,6 +382,41 @@ class Trainer:
         return out
 
     # -------------------------------------------------------------- recovery
+    def _handle_link_faults(self, links: set[tuple[int, int]]) -> None:
+        """A torus link died but both endpoints live.  Under
+        ``fault_mode="reroute"`` (apex comm) the collective schedules are
+        rewritten around the dead link — same numerics, no restart, only a
+        higher predicted hop cost; otherwise we just log the awareness."""
+        self.events.append(
+            f"LO|FA|MO: master aware of dead link(s) {sorted(links)}")
+        if self.tcfg.fault_mode != "reroute" or self.tcfg.comm != "apex" \
+                or self.mesh is None:
+            return
+        dp = self.mesh.shape[self.tcfg.dp_axis]
+        if self.torus.dims != (dp,):
+            # LofamoSim link pairs are ranks of self.torus; the apex
+            # schedules are lowered on the dp ring — without a 1:1 match
+            # the pair would be misread in the other rank space
+            self.events.append(
+                f"reroute unsupported: fault torus {self.torus.dims} is not "
+                f"the dp ring ({dp},); routing left to the runtime fabric")
+            return
+        before = self.predicted_comm_s
+        self._fault_map = fabric.FaultMap.normalized(
+            self._fault_map.dead_nodes,
+            set(self._fault_map.dead_links) | links)
+        try:
+            self._make_apex_step()
+        except fabric.UnroutableError as e:
+            self.events.append(f"reroute impossible ({e}); keeping schedule")
+            return
+        hops = max(s.max_hops for s in self.apex_schedules.values())
+        self.events.append(
+            f"rerouted collectives around {sorted(links)}: detour "
+            f"max_hops={hops}, predicted grad-sync "
+            f"{(before or 0) * 1e3:.2f} -> {self.predicted_comm_s * 1e3:.2f} ms"
+            " (training continues, no restart)")
+
     def _recover(self, failed: set[int]) -> None:
         """Checkpoint-restart on the surviving mesh (elastic re-mesh)."""
         self.events.append(f"LO|FA|MO: master aware of faults {sorted(failed)}"
@@ -343,6 +440,9 @@ class Trainer:
                                      for a in new_mesh.axis_names))
             self.lofamo = LofamoSim(self.torus,
                                     wd_period=self.tcfg.wd_period)
+            # fresh fabric: the surviving devices' links are all healthy
+            self._fault_map = fabric.FaultMap()
+            self._handled_links = set()
         # restore model+opt+data from the last verified checkpoint
         template = {"params": self.params, "opt": self.opt_state}
         try:

@@ -18,12 +18,14 @@ Engine scope: decoder-only transformer families (dense/moe/vlm).
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import fabric
 from repro.core.apelink import NetModel
 from repro.core.rdma import RdmaEndpoint
 from repro.core.tlb import PAGE_BYTES
@@ -101,10 +103,20 @@ class PagedLM:
         self.v_pool = jnp.zeros_like(self.k_pool)
         self.page_table = np.zeros((max_batch, self.pages_per_seq), np.int32)
         self.seq_lens = np.zeros((max_batch,), np.int32)
+        self.torus = Torus((4, 4))
+        self.net = NetModel()
         self.allocator = PageAllocator(
             self.n_pages, page_tokens,
             bytes_per_token=2 * L * cfg.n_kv_heads * hd * 2, endpoint=
-            RdmaEndpoint(Torus((4, 4)), rank=0, net=NetModel()))
+            RdmaEndpoint(self.torus, rank=0, net=self.net))
+        # Fabric twin of a TP deployment of this model on the torus: one
+        # residual-stream all-reduce per layer per decode step, priced by
+        # the same CollectiveSchedule the trainer executes.  Reported in
+        # stats() against the measured decode step time.
+        self.tp_schedule = fabric.lower_all_reduce(self.torus, ("x", "y"))
+        ar_bytes = max_batch * cfg.d_model * jnp.dtype(cfg.dtype).itemsize
+        self.predicted_tp_comm_s = L * fabric.estimate(
+            self.tp_schedule, ar_bytes, self.net).total_s
         self.slot_pages: dict[int, list[int]] = {}
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
@@ -232,6 +244,7 @@ class Engine:
         self.running: dict[int, Request] = {}
         self.finished: list[Request] = []
         self.steps = 0
+        self._step_times: list[float] = []
 
     def submit(self, req: Request) -> None:
         self.pending.append(req)
@@ -252,6 +265,7 @@ class Engine:
             self.running[slot] = req
 
     def step(self) -> None:
+        t0 = time.perf_counter()
         self._admit()
         if not self.running:
             return
@@ -263,6 +277,7 @@ class Engine:
             active[slot] = not req.done
         nxt = self.lm.decode_batch(tokens, active)
         self.steps += 1
+        self._step_times.append(time.perf_counter() - t0)
         for slot, req in list(self.running.items()):
             if active[slot]:
                 req.out_tokens.append(int(nxt[slot]))
@@ -277,9 +292,16 @@ class Engine:
 
     def stats(self) -> dict:
         alloc = self.lm.allocator
+        # median, not mean: the first decode step carries jit compilation
+        measured = (float(np.median(self._step_times))
+                    if self._step_times else 0.0)
         return {
             "decode_steps": self.steps,
             "finished": len(self.finished),
             "tlb_hit_rate": alloc.hit_rate,
             "translation_cost_s": alloc.translation_cost,
+            # fabric CollectiveSchedule prediction vs wall clock: the
+            # per-step TP all-reduce cost a torus deployment would add
+            "predicted_tp_comm_s": self.lm.predicted_tp_comm_s,
+            "measured_step_s": measured,
         }

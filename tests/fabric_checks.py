@@ -1,0 +1,184 @@
+"""Numeric schedule-executor checks that need >1 device — run in a
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8 (see
+test_fabric.py).
+
+Covers the acceptance bar for the fabric refactor:
+  * schedule-executed collectives == oracle (psum / sum / transpose / roll)
+    for every collective on 1D (8), 2D (2,4) and 3D (2,2,2) tori;
+  * fault-rewritten schedules: a detoured dead link changes NOTHING
+    numerically (all ranks still participate); a dead node shrinks the
+    ring and the live ranks reduce exactly the live contributions.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import collectives as C  # noqa: E402
+from repro.core import fabric, jaxcompat  # noqa: E402
+from repro.core.topology import Torus  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+
+
+def check(name):
+    print(f"[fabric] {name}")
+
+
+MESHES = {
+    "1d": ((8,), ("x",)),
+    "2d": ((2, 4), ("a", "b")),
+    "3d": ((2, 2, 2), ("u", "v", "w")),
+}
+
+
+def run_sharded(mesh, axes, fn, x):
+    lead = len(axes)
+    spec = P(*axes)
+
+    def per_shard(v):
+        return fn(v.reshape(v.shape[lead:])).reshape(v.shape)
+
+    return np.asarray(jax.jit(jaxcompat.shard_map(
+        per_shard, mesh=mesh, in_specs=(spec,), out_specs=spec))(x))
+
+
+def all_reduce_checks(rng):
+    for tag, (shape, axes) in MESHES.items():
+        mesh = make_mesh(shape, axes)
+        torus = Torus(shape)
+        x = rng.normal(size=shape + (51,)).astype(np.float32)
+        lead = tuple(range(len(shape)))
+        want = x.sum(lead)
+        for bidi in (True, False):
+            sched = fabric.lower_all_reduce(torus, axes, bidirectional=bidi)
+            out = run_sharded(
+                mesh, axes,
+                lambda v, s=sched: fabric.execute_all_reduce(s, v), x)
+            np.testing.assert_allclose(
+                out, np.broadcast_to(want, x.shape), rtol=2e-5, atol=1e-5)
+        check(f"all-reduce schedule == sum oracle ({tag}, bidi+uni)")
+
+
+def rs_ag_roundtrip_checks(rng):
+    for tag, (shape, axes) in MESHES.items():
+        mesh = make_mesh(shape, axes)
+        torus = Torus(shape)
+        x = rng.normal(size=shape + (37,)).astype(np.float32)
+        rs = fabric.lower_reduce_scatter(torus, axes)
+        ag = fabric.lower_all_gather(
+            torus, tuple(reversed(axes)),
+            axis_dims=tuple(reversed(range(len(axes)))))
+
+        def round_trip(v):
+            chunk, sizes = fabric.execute_reduce_scatter(rs, v)
+            return fabric.execute_all_gather(ag, chunk, sizes) \
+                .reshape(v.shape)
+
+        out = run_sharded(mesh, axes, round_trip, x)
+        want = np.broadcast_to(x.sum(tuple(range(len(shape)))), x.shape)
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=1e-5)
+        check(f"RS+AG schedule round trip ({tag})")
+
+
+def chunk_ownership_check(rng):
+    mesh = make_mesh((8,), ("x",))
+    sched = fabric.lower_reduce_scatter(Torus((8,)), ("x",))
+    x = rng.normal(size=(8, 64)).astype(np.float32)
+
+    def rs_only(v):
+        out, _ = fabric.execute_reduce_scatter(sched, v[0])
+        return out[None]
+
+    h = jax.jit(jaxcompat.shard_map(rs_only, mesh=mesh, in_specs=(P("x"),),
+                                    out_specs=P("x")))
+    chunks = np.asarray(h(x))
+    np.testing.assert_allclose(chunks, x.sum(0).reshape(8, 8),
+                               rtol=2e-5, atol=1e-5)
+    check("reduce-scatter slot owns contiguous chunk")
+
+
+def a2a_and_halo_checks(rng):
+    mesh = make_mesh((8,), ("x",))
+    torus = Torus((8,))
+    sched = fabric.lower_all_to_all(torus, "x")
+    xa = rng.normal(size=(8, 8, 3)).astype(np.float32)
+
+    def a2a(v):
+        return fabric.execute_all_to_all(sched, v[0])[None]
+
+    out = np.asarray(jax.jit(jaxcompat.shard_map(
+        a2a, mesh=mesh, in_specs=(P("x"),), out_specs=P("x")))(xa))
+    np.testing.assert_allclose(out, xa.transpose(1, 0, 2), rtol=1e-6)
+    check("all-to-all schedule == transpose")
+
+    hs = fabric.lower_halo_exchange(torus, "x")
+    xh = rng.normal(size=(8, 5, 4)).astype(np.float32)
+
+    def halo(v):
+        prev, nxt = fabric.execute_halo_exchange(hs, v[0], halo=2)
+        return jax.numpy.stack([prev, nxt])[None]
+
+    out = np.asarray(jax.jit(jaxcompat.shard_map(
+        halo, mesh=mesh, in_specs=(P("x"),), out_specs=P("x")))(xh))
+    for r in range(8):
+        np.testing.assert_allclose(out[r, 0], xh[(r - 1) % 8][-2:], rtol=1e-6)
+        np.testing.assert_allclose(out[r, 1], xh[(r + 1) % 8][:2], rtol=1e-6)
+    check("halo-exchange schedule == ring neighbours")
+
+
+def fault_rewrite_checks(rng):
+    # dead LINK: all ranks alive, detour is logical -> results identical
+    mesh = make_mesh((8,), ("x",))
+    torus = Torus((8,))
+    clean = fabric.lower_all_reduce(torus, ("x",))
+    detoured = fabric.rewrite(clean,
+                              fabric.FaultMap.normalized(links=[(2, 3)]))
+    assert detoured.max_hops == 7
+    x = rng.normal(size=(8, 100)).astype(np.float32)
+    out_c = run_sharded(mesh, ("x",),
+                        lambda v: fabric.execute_all_reduce(clean, v), x)
+    out_d = run_sharded(mesh, ("x",),
+                        lambda v: fabric.execute_all_reduce(detoured, v), x)
+    np.testing.assert_array_equal(out_c, out_d)
+    check("dead-link detour: results bit-identical")
+
+    # dead NODE: ring shrinks to 7; live ranks reduce live contributions
+    dead = 3
+    shrunk = fabric.rewrite(clean, fabric.FaultMap.normalized(nodes=[dead]))
+    out_s = run_sharded(mesh, ("x",),
+                        lambda v: fabric.execute_all_reduce(shrunk, v), x)
+    live = [r for r in range(8) if r != dead]
+    want_live = x[live].sum(0)
+    for r in live:
+        np.testing.assert_allclose(out_s[r], want_live, rtol=2e-5, atol=1e-5)
+    check("dead-node shrunk ring: live ranks reduce live contributions")
+
+    # mean over the shrunk ring divides by the LIVE count
+    shrunk_mean = fabric.rewrite(
+        fabric.lower_all_reduce(torus, ("x",), mean=True),
+        fabric.FaultMap.normalized(nodes=[dead]))
+    out_m = run_sharded(
+        mesh, ("x",),
+        lambda v: fabric.execute_all_reduce(shrunk_mean, v), x)
+    for r in live:
+        np.testing.assert_allclose(out_m[r], want_live / 7,
+                                   rtol=2e-5, atol=1e-5)
+    check("shrunk-ring mean divides by live count")
+
+
+def main() -> None:
+    assert jax.device_count() == 8, jax.device_count()
+    rng = np.random.default_rng(7)
+    all_reduce_checks(rng)
+    rs_ag_roundtrip_checks(rng)
+    chunk_ownership_check(rng)
+    a2a_and_halo_checks(rng)
+    fault_rewrite_checks(rng)
+    print("ALL FABRIC CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

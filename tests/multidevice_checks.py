@@ -14,6 +14,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.core import collectives as C  # noqa: E402
+from repro.core import jaxcompat  # noqa: E402
 from repro.core import rdma  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 
@@ -45,7 +46,7 @@ def main() -> None:
     ours = np.asarray(C.make_stacked_all_reduce(mesh, ("x",))(x))
     def psum_ref(v):
         return jax.lax.psum(v, "x")
-    ref = jax.jit(jax.shard_map(psum_ref, mesh=mesh, in_specs=(P("x"),),
+    ref = jax.jit(jaxcompat.shard_map(psum_ref, mesh=mesh, in_specs=(P("x"),),
                                 out_specs=P("x")))
     got_ref = np.asarray(ref(x))
     np.testing.assert_allclose(ours, got_ref, rtol=2e-5, atol=1e-5)
@@ -73,7 +74,7 @@ def main() -> None:
     def rs_ag(v):
         chunk, sizes = C.dim_ordered_reduce_scatter(v, ("a", "b"))
         return C.dim_ordered_all_gather(chunk, ("a", "b"), sizes)
-    g = jax.jit(jax.shard_map(lambda v: rs_ag(v[0, 0])[None, None],
+    g = jax.jit(jaxcompat.shard_map(lambda v: rs_ag(v[0, 0])[None, None],
                               mesh=mesh24, in_specs=(P("a", "b"),),
                               out_specs=P("a", "b")))
     out3 = np.asarray(g(x2))
@@ -86,7 +87,7 @@ def main() -> None:
     def rs_only(v):
         out = C.ring_reduce_scatter(v[0], "x")
         return out[None]
-    h = jax.jit(jax.shard_map(rs_only, mesh=mesh, in_specs=(P("x"),),
+    h = jax.jit(jaxcompat.shard_map(rs_only, mesh=mesh, in_specs=(P("x"),),
                               out_specs=P("x")))
     xr = rng.normal(size=(8, 64)).astype(np.float32)
     chunks = np.asarray(h(xr))           # (8, 8): rank r -> chunk r
@@ -98,7 +99,7 @@ def main() -> None:
     # --- all-gather rank ordering ---------------------------------------------
     def ag_only(v):
         return C.ring_all_gather(v[0], "x")[None]
-    k = jax.jit(jax.shard_map(ag_only, mesh=mesh, in_specs=(P("x"),),
+    k = jax.jit(jaxcompat.shard_map(ag_only, mesh=mesh, in_specs=(P("x"),),
                               out_specs=P("x")))
     xg = rng.normal(size=(8, 6)).astype(np.float32)
     out = np.asarray(k(xg))              # (8, 8, 6), row j == xg[j]
@@ -109,7 +110,7 @@ def main() -> None:
     # --- ring all-to-all == transpose ------------------------------------------
     def a2a(v):
         return C.ring_all_to_all(v[0], "x")[None]
-    m = jax.jit(jax.shard_map(a2a, mesh=mesh, in_specs=(P("x"),),
+    m = jax.jit(jaxcompat.shard_map(a2a, mesh=mesh, in_specs=(P("x"),),
                               out_specs=P("x")))
     xa = rng.normal(size=(8, 8, 3)).astype(np.float32)
     out = np.asarray(m(xa))
@@ -117,7 +118,7 @@ def main() -> None:
     # fast path oracle
     def a2a_fast(v):
         return C.fast_all_to_all(v[0], "x")[None]
-    mf = jax.jit(jax.shard_map(a2a_fast, mesh=mesh, in_specs=(P("x"),),
+    mf = jax.jit(jaxcompat.shard_map(a2a_fast, mesh=mesh, in_specs=(P("x"),),
                                out_specs=P("x")))
     np.testing.assert_allclose(np.asarray(mf(xa)), out, rtol=1e-6)
     check("ring all-to-all == transpose == lax.all_to_all")
@@ -126,7 +127,7 @@ def main() -> None:
     def halo(v):
         prev, nxt = C.halo_exchange(v[0], "x", halo=2)
         return jnp.stack([prev, nxt])[None]
-    hx = jax.jit(jax.shard_map(halo, mesh=mesh, in_specs=(P("x"),),
+    hx = jax.jit(jaxcompat.shard_map(halo, mesh=mesh, in_specs=(P("x"),),
                                out_specs=P("x")))
     xh = rng.normal(size=(8, 5, 4)).astype(np.float32)
     out = np.asarray(hx(xh))  # (8, 2, 2, 4)
@@ -138,7 +139,7 @@ def main() -> None:
     # --- rdma put_shift / put_coords ----------------------------------------------
     def shift3(v):
         return rdma.put_shift(v[0], "x", 3)[None]
-    sh = jax.jit(jax.shard_map(shift3, mesh=mesh, in_specs=(P("x"),),
+    sh = jax.jit(jaxcompat.shard_map(shift3, mesh=mesh, in_specs=(P("x"),),
                                out_specs=P("x")))
     xs = np.arange(8 * 4, dtype=np.float32).reshape(8, 4)
     out = np.asarray(sh(xs))
@@ -146,7 +147,7 @@ def main() -> None:
 
     def coords_put(v):
         return rdma.put_coords(v[0, 0], ("a", "b"), (1, -2))[None, None]
-    cp = jax.jit(jax.shard_map(coords_put, mesh=mesh24, in_specs=(P("a", "b"),),
+    cp = jax.jit(jaxcompat.shard_map(coords_put, mesh=mesh24, in_specs=(P("a", "b"),),
                                out_specs=P("a", "b")))
     xc = np.arange(2 * 4 * 3, dtype=np.float32).reshape(2, 4, 3)
     out = np.asarray(cp(xc))

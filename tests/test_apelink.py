@@ -1,8 +1,9 @@
 """APElink codec + efficiency/latency model tests (paper §2.3, §3)."""
-import hypothesis as hp
-import hypothesis.strategies as st
-import numpy as np
 import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+import numpy as np
 
 from repro.core import apelink, hw
 

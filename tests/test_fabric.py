@@ -1,0 +1,230 @@
+"""CollectiveSchedule IR tests: lowering structure, cost-model
+monotonicity, fault rewriting, and LO|FA|MO link-fault inference.
+
+Numeric executor equivalence (schedule-executed vs oracle on 1D/2D/3D
+tori) runs in a subprocess with 8 forced host devices — see
+``fabric_checks.py`` and the slow test at the bottom.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import fabric
+from repro.core.lofamo import LofamoSim
+from repro.core.topology import Torus
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# lowering structure
+# ---------------------------------------------------------------------------
+
+def test_all_reduce_lowering_shape():
+    s = fabric.lower_all_reduce(Torus((2, 4)), ("a", "b"))
+    assert [ (p.kind, p.axis) for p in s.phases ] == [
+        ("reduce_scatter", "a"), ("reduce_scatter", "b"),
+        ("all_gather", "b"), ("all_gather", "a")]
+    # rounds: (2-1) + (4-1) per leg
+    assert s.rounds == 2 * (1 + 3)
+    # dual-DMA: two concurrent transfers per round
+    assert s.n_messages == 2 * s.rounds
+    assert s.max_hops == 1
+
+
+def test_rs_fracs_sum_to_ring_traffic():
+    """A bidirectional RS over n ranks injects (n-1)/n of the input."""
+    n = 8
+    s = fabric.lower_reduce_scatter(Torus((n,)), ("x",))
+    assert s.bytes_per_rank(n * 1000) == pytest.approx(
+        (n - 1) / n * n * 1000)
+
+
+def test_all_reduce_fracs_match_2n_minus_1_over_n():
+    n = 8
+    s = fabric.lower_all_reduce(Torus((n,)), ("x",))
+    assert s.bytes_per_rank(1 << 20) == pytest.approx(
+        2 * (n - 1) / n * (1 << 20))
+
+
+def test_dim_ordered_scales_shrink_then_grow():
+    s = fabric.lower_all_reduce(Torus((2, 2, 2)), ("x", "y", "z"))
+    assert [p.scale for p in s.phases] == [1, 0.5, 0.25, 0.125, 0.25, 0.5]
+
+
+def test_trivial_axis_has_no_steps():
+    s = fabric.lower_all_reduce(Torus((1,)), ("x",))
+    assert s.rounds == 0
+
+
+def test_lowering_validates_axes():
+    with pytest.raises(ValueError):
+        fabric.lower_all_reduce(Torus((4,)), ("x", "y"))
+    with pytest.raises(ValueError):
+        fabric.lower("nope", Torus((4,)), ("x",))
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_cost_monotone_in_bytes():
+    s = fabric.lower_all_reduce(Torus((4, 4)), ("x", "y"))
+    ts = [fabric.estimate(s, n).total_s for n in (1 << 10, 1 << 15, 1 << 20)]
+    assert ts[0] < ts[1] < ts[2]
+
+
+def test_cost_monotone_in_hops():
+    clean = fabric.lower_all_reduce(Torus((8,)), ("x",))
+    detoured = fabric.rewrite(
+        clean, fabric.FaultMap.normalized(links=[(2, 3)]))
+    n = 1 << 20
+    assert detoured.max_hops > clean.max_hops
+    assert fabric.estimate(detoured, n).total_s \
+        > fabric.estimate(clean, n).total_s
+
+
+def test_cost_monotone_in_ring_size():
+    n = 1 << 20
+    ts = [fabric.estimate(
+        fabric.lower_all_reduce(Torus((k,)), ("x",)), n).total_s
+        for k in (2, 4, 8, 16)]
+    assert all(a < b for a, b in zip(ts, ts[1:]))
+
+
+def test_bidirectional_predicted_faster():
+    n = 1 << 22
+    t = Torus((8,))
+    bidi = fabric.estimate(fabric.lower_all_reduce(t, ("x",)), n).total_s
+    uni = fabric.estimate(
+        fabric.lower_all_reduce(t, ("x",), bidirectional=False), n).total_s
+    assert bidi < uni
+
+
+# ---------------------------------------------------------------------------
+# fault rewriting
+# ---------------------------------------------------------------------------
+
+def test_rewrite_noop_without_faults():
+    s = fabric.lower_all_reduce(Torus((8,)), ("x",))
+    assert fabric.rewrite(s, fabric.FaultMap()) is s
+
+
+def test_dead_node_shrinks_ring_and_drops_from_perms():
+    s = fabric.lower_all_reduce(Torus((8,)), ("x",))
+    r = fabric.rewrite(s, fabric.FaultMap.normalized(nodes=[3]))
+    for ph in r.phases:
+        assert ph.ring == (0, 1, 2, 4, 5, 6, 7)
+        for st in ph.steps:
+            for tr in st.transfers:
+                assert all(3 not in pair for pair in tr.perm)
+    # the 2->4 transfer cannot route through dead node 3 on a 1D ring:
+    # it takes the 6-hop detour the long way around
+    assert r.max_hops == 6
+
+
+def test_dead_link_keeps_ring_bumps_hops():
+    s = fabric.lower_all_reduce(Torus((8,)), ("x",))
+    r = fabric.rewrite(s, fabric.FaultMap.normalized(links=[(0, 1)]))
+    assert all(ph.ring == tuple(range(8)) for ph in r.phases)
+    assert r.max_hops == 7  # the long way around the ring
+
+
+def test_dead_link_2d_detours_through_other_dim():
+    s = fabric.lower_all_reduce(Torus((4, 4)), ("x", "y"))
+    r = fabric.rewrite(s, fabric.FaultMap.normalized(links=[(0, 4)]),
+                       reorder_axes=False)
+    # detour 0 -> 4 exists through the orthogonal dimension: 3 hops
+    assert 1 < r.max_hops <= 3
+
+
+def test_axis_reordering_puts_faulted_axis_last():
+    s = fabric.lower_all_reduce(Torus((4, 4)), ("x", "y"))
+    # kill a link on the x rings (dim 0): x should be reduced last
+    r = fabric.rewrite(s, fabric.FaultMap.normalized(links=[(0, 4)]))
+    assert r.axes == ("y", "x")
+    assert r.axis_dims == (1, 0)
+    # numerically the all-reduce is order-invariant; cheaper than not
+    # reordering because the detoured axis now moves 1/4 of the bytes
+    n = 1 << 22
+    r_no = fabric.rewrite(s, fabric.FaultMap.normalized(links=[(0, 4)]),
+                          reorder_axes=False)
+    assert fabric.estimate(r, n).total_s <= fabric.estimate(r_no, n).total_s
+
+
+def test_partitioned_fabric_raises():
+    # 1D ring of 4: killing both links of rank 1's neighbours cuts it off
+    s = fabric.lower_all_reduce(Torus((4,)), ("x",))
+    with pytest.raises(fabric.UnroutableError):
+        fabric.rewrite(s, fabric.FaultMap.normalized(links=[(0, 1), (1, 2)]))
+
+
+def test_all_to_all_rejects_dead_nodes_allows_dead_links():
+    s = fabric.lower_all_to_all(Torus((4,)), "x")
+    with pytest.raises(fabric.UnroutableError):
+        fabric.rewrite(s, fabric.FaultMap.normalized(nodes=[2]))
+    r = fabric.rewrite(s, fabric.FaultMap.normalized(links=[(1, 2)]))
+    assert r.max_hops == 3
+
+
+def test_mean_and_direction_flags_survive_rewrite():
+    s = fabric.lower_all_reduce(Torus((8,)), ("x",), bidirectional=False,
+                                mean=True)
+    r = fabric.rewrite(s, fabric.FaultMap.normalized(nodes=[0]))
+    assert r.mean and not r.bidirectional
+    assert all(ph.mean for ph in r.phases if ph.kind == "reduce_scatter")
+    assert all(ph.directions == 1 for ph in r.phases if ph.steps)
+
+
+# ---------------------------------------------------------------------------
+# LO|FA|MO link-fault inference feeding the rewriter
+# ---------------------------------------------------------------------------
+
+def test_lofamo_link_fault_detected_as_link_not_node():
+    sim = LofamoSim(Torus((4, 4)), wd_period=0.5)
+    ev = sim.kill_link(1, 2)
+    sim.run(3)
+    assert sim.detected_links_at_master() == {(1, 2)}
+    assert sim.detected_at_master() == set()  # both endpoints alive
+    fm = fabric.fault_map_from_lofamo(sim)
+    assert fm.dead_links == frozenset({(1, 2)})
+    assert not fm.dead_nodes
+    # awareness time is tracked for the link event like for node events
+    assert ev.awareness_time is not None
+    assert 0 < ev.awareness_time <= 2 * 0.5 + 1e-2
+
+
+def test_lofamo_node_fault_still_node_not_link():
+    sim = LofamoSim(Torus((4, 4)), wd_period=0.5)
+    sim.kill_node(5)
+    sim.run(3)
+    assert 5 in sim.detected_at_master()
+    assert sim.detected_links_at_master() == set()
+
+
+def test_lofamo_fault_map_drives_rewrite():
+    sim = LofamoSim(Torus((8,)), wd_period=0.5)
+    sim.kill_link(3, 4)
+    sim.run(3)
+    sched = fabric.lower_all_reduce(Torus((8,)), ("x",))
+    r = fabric.rewrite(sched, fabric.fault_map_from_lofamo(sim))
+    assert r.max_hops == 7
+
+
+# ---------------------------------------------------------------------------
+# numeric equivalence on 1D/2D/3D tori (8 forced host devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fabric_multidevice_equivalence():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "fabric_checks.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, \
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL FABRIC CHECKS PASSED" in proc.stdout

@@ -1,10 +1,11 @@
 """Per-kernel validation: Pallas (interpret=True) vs. pure-jnp oracle,
 swept over shapes and dtypes, plus hypothesis property tests on invariants.
 """
-import hypothesis as hp
-import hypothesis.strategies as st
-import numpy as np
 import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+import numpy as np
 
 import jax
 import jax.numpy as jnp

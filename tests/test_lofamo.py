@@ -1,7 +1,8 @@
 """LO|FA|MO fault-awareness simulation tests (paper §4)."""
-import hypothesis as hp
-import hypothesis.strategies as st
 import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core.lofamo import Health, LofamoSim, awareness_time_model
 from repro.core.topology import Torus

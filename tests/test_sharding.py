@@ -6,7 +6,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.models import api
@@ -14,11 +14,11 @@ from repro.parallel import sharding
 
 
 def mesh_pod():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return sharding.abstract_mesh((16, 16), ("data", "model"))
 
 
 def mesh_multipod():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return sharding.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _cfg(name, **over):

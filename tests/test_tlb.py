@@ -1,7 +1,8 @@
 """TLB behaviour + Fig 2 bandwidth-gain model (paper §2.2)."""
-import hypothesis as hp
-import hypothesis.strategies as st
 import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core import apelink
 from repro.core.tlb import PAGE_BYTES, T_HW_HIT, T_NIOS_WALK, Tlb

@@ -1,7 +1,8 @@
 """Torus topology invariants (unit + hypothesis property tests)."""
-import hypothesis as hp
-import hypothesis.strategies as st
 import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core.topology import Torus, enumerate_fault_sets
 
