@@ -59,7 +59,8 @@ def _claim_rows() -> list[dict]:
          bidi.rounds,
          "note": f"{bidi.n_messages} ppermutes fused to 2-concurrent rounds"},
         {"bench": "fabric_cost", "metric": "bidi_speedup", "value":
-         t_uni / t_bidi, "note": "dual-DMA predicted time cut"},
+         t_uni / t_bidi, "gate": "higher",
+         "note": "dual-DMA predicted time cut"},
     ]
     # fault detour: kill link (0,1) on the 8-ring -> the 0->1 transfer
     # takes the 7-hop detour; schedule may never get cheaper

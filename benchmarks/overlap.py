@@ -1,0 +1,141 @@
+"""Fig 1 at the schedule level — sequential barrier vs bucketed overlap.
+
+The paper's §2.1 timeline: one DMA engine leaves the PCIe bus idle between
+a request's completion and the next issue (~50% efficiency); a second
+engine fed by a prefetchable command queue keeps transactions in flight
+and recovers up to 40% of total time.  The overlap engine replays that
+trade at the collective-schedule level: ``engines=1`` is the monolithic
+post-backward gradient sync (all compute, then one barrier collective);
+``engines=2`` is the bucketed schedule issued inside the backward pass
+(``fabric.plan_buckets`` + ``fabric.estimate_overlapped``), hiding fabric
+rounds behind the remaining compute.
+
+The modelled twin is a paper-era DP deployment: a ~125M-param model,
+data-parallel over an 8-ring of the APEnet+ torus, gradients all-reduced
+with the dimension-ordered ring schedule and backward compute priced at a
+Fermi/Kepler-class effective rate — a *comm-bound* shape (fabric time
+exceeds backward compute), which is where overlap pays.
+
+Gated claim: the bucketed-overlapped execution models >= 25% total-time
+reduction vs the sequential barrier on this shape, with the exposed/hidden
+comm split consistent with the timeline.
+"""
+from __future__ import annotations
+
+from repro.core import fabric
+from repro.core.rdma import RdmaEndpoint
+from repro.core.topology import Torus
+
+DP = 8
+N_LAYERS = 24
+LAYER_PARAMS = 5_000_000       # ~125M params total (24 layers + head)
+HEAD_PARAMS = 5_000_000
+TOKENS_PER_RANK = 1024
+# paper-era accelerator (Fermi/Kepler-class) at a conservative 40% MFU;
+# backward ~ 2x forward = 4 FLOPs per param per token
+GPU_EFF_FLOPS = 4.0e12 * 0.4
+BUCKET_MB = 16
+
+
+def _leaf_sizes() -> list[int]:
+    # per-layer leaves: wq, wk, wv, wo, mlp up, mlp down, norms — the
+    # granularity the bucket packer actually sees on a real param tree
+    attn = LAYER_PARAMS // 10
+    layer = [attn, attn, attn, attn, 3 * attn, 3 * attn]
+    return layer * N_LAYERS + [HEAD_PARAMS]
+
+
+def _compute_s() -> float:
+    n_params = sum(_leaf_sizes())
+    return 4.0 * n_params * TOKENS_PER_RANK / GPU_EFF_FLOPS
+
+
+def _schedule():
+    return fabric.lower_all_reduce(Torus((DP,)), ("data",), mean=True)
+
+
+def _estimate(bucket_mb: float, queue_depth: int) -> fabric.OverlapEstimate:
+    plan = fabric.plan_buckets(_leaf_sizes(), int(bucket_mb * (1 << 20)),
+                               itemsize=4)
+    return fabric.estimate_overlapped(_schedule(), plan, _compute_s(),
+                                      queue_depth=queue_depth)
+
+
+def run() -> list[dict]:
+    rows = []
+    # command-queue depths straight from the RdmaEndpoint model: the
+    # single-engine card has one descriptor in flight, the dual-engine
+    # card prefetches (2 slots per engine)
+    single = RdmaEndpoint(Torus((DP,)), 0, engines=1, cq_slots=1)
+    dual = RdmaEndpoint(Torus((DP,)), 0, engines=2)
+    est = _estimate(BUCKET_MB, dual.queue_depth)
+    rows += [
+        {"bench": "overlap", "metric": "sequential_ms",
+         "value": est.sequential_s * 1e3,
+         "note": "engines=1: barrier sync after full backward"},
+        {"bench": "overlap", "metric": "overlapped_ms",
+         "value": est.total_s * 1e3,
+         "note": f"engines=2: {BUCKET_MB} MB buckets inside backward"},
+        {"bench": "overlap", "metric": "overlap_reduction",
+         "value": est.reduction, "gate": "higher",
+         "note": "paper Fig 1: up to 40% total-time recovery"},
+        {"bench": "overlap", "metric": "comm_hidden_ms",
+         "value": est.hidden_comm_s * 1e3,
+         "note": "fabric time under backward compute"},
+        {"bench": "overlap", "metric": "comm_exposed_ms",
+         "value": est.exposed_comm_s * 1e3,
+         "note": "fabric time the step pays for"},
+        {"bench": "overlap", "metric": "overlap_efficiency",
+         "value": est.efficiency, "gate": "higher",
+         "note": "hidden / (hidden + exposed)"},
+        {"bench": "overlap", "metric": "compute_ms",
+         "value": est.compute_s * 1e3,
+         "note": f"4*P*T at {GPU_EFF_FLOPS / 1e12:.1f} TF/s effective"},
+    ]
+    # queue-depth sweep (the prefetchable command queue of §2.1): a
+    # depth-1 queue pays the issue gap on every bucket
+    t_cq1 = _estimate(BUCKET_MB, single.queue_depth).total_s
+    t_cq = _estimate(BUCKET_MB, dual.queue_depth).total_s
+    rows += [
+        {"bench": "overlap", "metric": "time_cq1_ms", "value": t_cq1 * 1e3,
+         "note": "single-slot command queue"},
+        {"bench": "overlap", "metric": f"time_cq{dual.queue_depth}_ms",
+         "value": t_cq * 1e3, "note": "prefetchable queue (dual engine)"},
+    ]
+    # bucket-size sweep: too-small buckets pay per-message overhead,
+    # too-large ones leave nothing to overlap (the Fig 1 message-size arc)
+    for mb in (1, 4, 16, 64, 256):
+        e = _estimate(mb, dual.queue_depth)
+        rows.append({"bench": "overlap", "metric": f"reduction_at_{mb}MB",
+                     "value": e.reduction,
+                     "note": f"{e.total_s * 1e3:.2f} ms overlapped"})
+    return rows
+
+
+def check(rows) -> list[str]:
+    vals = {r["metric"]: r["value"] for r in rows}
+    errs = []
+    if vals["overlap_reduction"] < 0.25:
+        errs.append(f"modelled reduction {vals['overlap_reduction']:.3f} "
+                    "< 0.25 on the comm-bound shape")
+    if vals["overlapped_ms"] > vals["sequential_ms"]:
+        errs.append("bucketed overlap slower than the sequential barrier")
+    if not 0.0 <= vals["overlap_efficiency"] <= 1.0:
+        errs.append(f"efficiency {vals['overlap_efficiency']} out of [0,1]")
+    if vals["time_cq1_ms"] < vals["time_cq4_ms"]:
+        errs.append("depth-1 command queue beat the prefetchable queue")
+    # exposed/hidden split must be consistent with the timeline estimate
+    est = _estimate(BUCKET_MB, 4)
+    busy = est.comm_s + est.overhead_s
+    if abs((est.hidden_comm_s + est.exposed_comm_s) - busy) > 1e-9 * busy \
+            + 1e-12:
+        errs.append("hidden + exposed comm does not account for fabric "
+                    "busy time")
+    if abs(est.reduction - vals["overlap_reduction"]) > 1e-9:
+        errs.append("estimate not reproducible")
+    return errs
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['bench']},{r['metric']},{r['value']}")

@@ -6,28 +6,90 @@
 Each module exposes ``run() -> [rows]`` and ``check(rows) -> [errors]``;
 check() validates the paper's quantitative claims against our model and the
 exit code reflects any violation — this is the reproduction gate.
+
+Every invocation also appends a ``BENCH_<n>.json`` snapshot (per-metric
+values, per-module timings, failures) to the repo root — the input of
+``scripts/bench_gate.py``, which diffs the newest snapshot against the
+previous one and fails CI on >10% regression of gated metrics (rows that
+carry a ``"gate": "higher"|"lower"`` direction).  Set ``BENCH_DIR`` to
+redirect the snapshots or ``BENCH_JSON=0`` to skip writing one.
 """
 from __future__ import annotations
 
 import csv
 import importlib
 import io
+import json
+import os
+import re
 import sys
 import time
 
 MODULES = ["apelink_eff", "dma_overlap", "tlb", "latency", "bandwidth",
-           "fabric_cost", "lofamo", "nextgen", "roofline"]
+           "fabric_cost", "overlap", "lofamo", "nextgen", "roofline"]
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def bench_dir() -> str:
+    return os.environ.get("BENCH_DIR") or REPO
+
+
+def list_snapshots(dirname: str) -> list[tuple[int, str]]:
+    """(seq, path) pairs of existing BENCH_<n>.json, ascending."""
+    out = []
+    try:
+        names = os.listdir(dirname)
+    except FileNotFoundError:
+        return []
+    for name in names:
+        m = re.fullmatch(r"BENCH_(\d+)\.json", name)
+        if m:
+            out.append((int(m.group(1)), os.path.join(dirname, name)))
+    return sorted(out)
+
+
+KEEP_SNAPSHOTS = 5   # the gate reads the newest 2; a few more for humans
+
+
+def write_snapshot(names, rows, timings, errors) -> str | None:
+    if os.environ.get("BENCH_JSON", "1") == "0":
+        return None
+    d = bench_dir()
+    os.makedirs(d, exist_ok=True)
+    existing = list_snapshots(d)
+    seq = (existing[-1][0] + 1) if existing else 1
+    path = os.path.join(d, f"BENCH_{seq}.json")
+    payload = {
+        "seq": seq,
+        "created_unix": time.time(),
+        "modules": list(names),
+        "timings_s": timings,
+        "rows": rows,
+        "failures": errors,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    # bound the history (locally and in the CI rolling cache)
+    for _, old in existing[: -(KEEP_SNAPSHOTS - 1) or None]:
+        try:
+            os.remove(old)
+        except OSError:
+            pass
+    return path
 
 
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     names = argv or MODULES
     all_rows, all_errs = [], []
+    timings: dict[str, float] = {}
     for name in names:
         mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.perf_counter()
         rows = mod.run()
         dt = time.perf_counter() - t0
+        timings[name] = dt
         errs = mod.check(rows) if hasattr(mod, "check") else []
         all_rows += rows
         all_errs += [f"{name}: {e}" for e in errs]
@@ -42,6 +104,9 @@ def main(argv=None) -> int:
         w.writerow([r["bench"], r["metric"], r["value"], r.get("note", "")])
     print()
     print(buf.getvalue())
+    snap = write_snapshot(names, all_rows, timings, all_errs)
+    if snap:
+        print(f"bench snapshot: {snap}")
     if all_errs:
         print("PAPER-CLAIM CHECK FAILURES:", file=sys.stderr)
         for e in all_errs:

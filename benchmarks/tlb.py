@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import hw
 from repro.core.apelink import sustained_bandwidth
 from repro.core.tlb import PAGE_BYTES, Tlb
 

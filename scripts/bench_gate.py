@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: diff the two newest ``BENCH_<n>.json`` snapshots
+(written by ``benchmarks/run.py``) and fail on >10% regression of gated
+metrics.
+
+The contract: a benchmark row may declare ``"gate": "higher"`` (bigger is
+better — speedups, reductions, efficiencies) or ``"gate": "lower"``
+(smaller is better — times, costs).  Ungated rows are informational and
+never fail the gate; gated metrics present in only one snapshot (a bench
+was added/removed or a different lane ran) are reported but don't fail.
+
+    python scripts/bench_gate.py [--dir DIR] [--threshold 0.10]
+
+Exit 0 when no gated metric regressed past the threshold (or when fewer
+than two snapshots exist — the first run records the baseline), exit 1
+otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from benchmarks.run import list_snapshots  # noqa: E402  (shared discovery)
+
+
+def gated_rows(snapshot: dict) -> dict[tuple[str, str], dict]:
+    out = {}
+    for row in snapshot.get("rows", []):
+        if row.get("gate") in ("higher", "lower"):
+            out[(row["bench"], row["metric"])] = row
+    return out
+
+
+def compare(prev: dict, cur: dict, threshold: float) -> tuple[list, list]:
+    """Returns (report lines, regressions)."""
+    prows, crows = gated_rows(prev), gated_rows(cur)
+    lines, regressions = [], []
+    for key in sorted(crows):
+        bench, metric = key
+        if key not in prows:
+            lines.append(f"  new    {bench}.{metric} = "
+                         f"{crows[key]['value']:.6g} (baseline recorded)")
+            continue
+        base, new = float(prows[key]["value"]), float(crows[key]["value"])
+        direction = crows[key]["gate"]
+        if base == 0.0:
+            delta = 0.0 if new == 0.0 else float("inf")
+        else:
+            delta = (new - base) / abs(base)
+        worse = (-delta if direction == "higher" else delta)
+        tag = "ok    "
+        if worse > threshold:
+            tag = "REGRESS"
+            regressions.append(
+                f"{bench}.{metric}: {base:.6g} -> {new:.6g} "
+                f"({delta * 100:+.1f}%, {direction}-is-better, "
+                f"threshold {threshold * 100:.0f}%)")
+        lines.append(f"  {tag} {bench}.{metric}: {base:.6g} -> {new:.6g} "
+                     f"({delta * 100:+.1f}%, {direction})")
+    for key in sorted(set(prows) - set(crows)):
+        lines.append(f"  gone   {key[0]}.{key[1]} (not in current run)")
+    return lines, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default=os.environ.get("BENCH_DIR") or REPO,
+                    help="directory holding BENCH_<n>.json snapshots")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative regression tolerance (default 0.10)")
+    args = ap.parse_args(argv)
+    snaps = list_snapshots(args.dir)
+    if len(snaps) < 2:
+        have = snaps[-1][1] if snaps else "none"
+        print(f"[bench-gate] <2 snapshots in {args.dir} (latest: {have}); "
+              "baseline recorded, nothing to diff")
+        return 0
+    (pseq, ppath), (cseq, cpath) = snaps[-2], snaps[-1]
+    with open(ppath) as f:
+        prev = json.load(f)
+    with open(cpath) as f:
+        cur = json.load(f)
+    print(f"[bench-gate] BENCH_{pseq}.json -> BENCH_{cseq}.json "
+          f"(threshold {args.threshold * 100:.0f}%)")
+    lines, regressions = compare(prev, cur, args.threshold)
+    for ln in lines:
+        print(ln)
+    if regressions:
+        print("\nBENCH REGRESSIONS:", file=sys.stderr)
+        for r in regressions:
+            print("  " + r, file=sys.stderr)
+        return 1
+    print("[bench-gate] no gated-metric regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

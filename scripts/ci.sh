@@ -1,25 +1,53 @@
 #!/usr/bin/env bash
-# Tier-1 CI: install the package (editable, offline-safe) + dev deps where
-# the index is reachable, then run the tier-1 test command and the fabric
-# cost-model benchmark gate.
+# CI driver — the single source of truth for local runs AND the GitHub
+# workflow (.github/workflows/ci.yml invokes this same script).
+#
+#   scripts/ci.sh fast   # PR lane:   lint -> fast tests (-m "not slow")
+#                        #            -> quick benches -> regression gate
+#   scripts/ci.sh full   # main lane: lint -> full tier-1 tests
+#                        #            -> all benches -> regression gate
+#
+# The bench gate diffs the BENCH_<n>.json snapshot this run writes against
+# the previous one (scripts/bench_gate.py; >10% regression of gated
+# metrics fails).  The first run just records the baseline.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+LANE="${1:-fast}"
 
 # Editable install makes `import repro` work without PYTHONPATH; keep the
 # PYTHONPATH fallback so the script also works where pip cannot write.
 pip install -e . --no-deps --no-build-isolation -q 2>/dev/null \
     || echo "[ci] editable install unavailable; falling back to PYTHONPATH"
-# dev extras (hypothesis property tests) are best-effort: tier-1 collects
-# cleanly without them via pytest.importorskip
-pip install -q pytest hypothesis 2>/dev/null \
-    || echo "[ci] dev extras unavailable offline; property tests skipped"
+# dev extras (hypothesis property tests, ruff lint) are best-effort
+# offline: tier-1 collects cleanly without them via pytest.importorskip,
+# and the lint step below degrades to a skip when ruff is missing.
+pip install -q pytest hypothesis ruff 2>/dev/null \
+    || echo "[ci] dev extras unavailable offline; lint/property tests may skip"
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "[ci] tier-1 tests"
-python -m pytest -x -q
+echo "[ci] lint (ruff)"
+if command -v ruff >/dev/null 2>&1; then
+    # hard failure when ruff is present (CI always has it; offline dev
+    # boxes without it skip with a warning)
+    ruff check src tests benchmarks scripts
+else
+    echo "[ci] ruff not installed; skipping lint (best-effort offline)"
+fi
 
-echo "[ci] fabric cost-model benchmark gate"
-python -m benchmarks.run fabric_cost
+if [ "$LANE" = "full" ]; then
+    echo "[ci] tier-1 tests (full lane)"
+    python -m pytest -x -q
+    echo "[ci] benchmarks (all modules)"
+    python -m benchmarks.run
+else
+    echo "[ci] tier-1 tests (fast lane: -m 'not slow')"
+    python -m pytest -x -q -m "not slow"
+    echo "[ci] benchmarks (quick set)"
+    python -m benchmarks.run overlap dma_overlap fabric_cost
+fi
 
-echo "[ci] OK"
+echo "[ci] bench regression gate"
+python scripts/bench_gate.py
+
+echo "[ci] OK ($LANE lane)"

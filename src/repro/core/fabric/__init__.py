@@ -11,31 +11,36 @@ One IR, three consumers:
 collective API; everything else (trainer, serving engine, benchmarks)
 consumes schedules directly.
 """
-from repro.core.fabric.cost import (CostEstimate, algorithmic_bandwidth,
-                                    estimate, message_time)
+from repro.core.fabric.cost import (CostEstimate, OverlapEstimate,
+                                    algorithmic_bandwidth, estimate,
+                                    estimate_overlapped, message_time)
 from repro.core.fabric.execute import (execute, execute_all_gather,
                                        execute_all_reduce,
                                        execute_all_to_all,
                                        execute_halo_exchange,
-                                       execute_reduce_scatter, ring_slot)
+                                       execute_reduce_scatter,
+                                       make_bucket_grad_hook, ring_slot)
 from repro.core.fabric.fault import (UnroutableError, fault_map_from_lofamo,
                                      rewrite)
 from repro.core.fabric.lower import (axis_fault_penalty, live_ring, lower,
                                      lower_all_gather, lower_all_reduce,
                                      lower_all_to_all, lower_halo_exchange,
-                                     lower_reduce_scatter)
-from repro.core.fabric.schedule import (A2A, AG, AR, HALO, RS,
-                                        CollectiveSchedule, FaultMap, Phase,
-                                        Step, Transfer)
+                                     lower_reduce_scatter, plan_buckets)
+from repro.core.fabric.schedule import (A2A, AG, AR, HALO, RS, Bucket,
+                                        BucketPlan, CollectiveSchedule,
+                                        FaultMap, Phase, Step, Transfer)
 
 __all__ = [
     "A2A", "AG", "AR", "HALO", "RS",
-    "CollectiveSchedule", "FaultMap", "Phase", "Step", "Transfer",
-    "CostEstimate", "algorithmic_bandwidth", "estimate", "message_time",
+    "Bucket", "BucketPlan", "CollectiveSchedule", "FaultMap", "Phase",
+    "Step", "Transfer",
+    "CostEstimate", "OverlapEstimate", "algorithmic_bandwidth", "estimate",
+    "estimate_overlapped", "message_time",
     "execute", "execute_all_gather", "execute_all_reduce",
     "execute_all_to_all", "execute_halo_exchange", "execute_reduce_scatter",
-    "ring_slot", "UnroutableError", "fault_map_from_lofamo", "rewrite",
+    "make_bucket_grad_hook", "ring_slot",
+    "UnroutableError", "fault_map_from_lofamo", "rewrite",
     "axis_fault_penalty", "live_ring", "lower", "lower_all_gather",
     "lower_all_reduce", "lower_all_to_all", "lower_halo_exchange",
-    "lower_reduce_scatter",
+    "lower_reduce_scatter", "plan_buckets",
 ]

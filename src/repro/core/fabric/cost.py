@@ -14,9 +14,10 @@ runtime report *this* number against measured wall time.
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 from repro.core.apelink import NetModel
-from repro.core.fabric.schedule import CollectiveSchedule
+from repro.core.fabric.schedule import BucketPlan, CollectiveSchedule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +60,121 @@ def estimate(schedule: CollectiveSchedule, nbytes: int,
                         rounds=schedule.rounds,
                         bytes_per_rank=schedule.bytes_per_rank(nbytes),
                         max_hops=schedule.max_hops)
+
+
+# ----------------------------------------------------------------------------
+# overlap-aware estimate (the bucketed engine's timeline model)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OverlapEstimate:
+    """Timeline of a bucketed, compute-overlapped schedule execution.
+
+    The model is the schedule-level analogue of the paper's Fig 1 dual-DMA
+    timeline: bucket i's collective can start once (a) its gradients exist
+    (the backward compute segment feeding it finished) and (b) the fabric
+    finished bucket i-1.  Comm that runs while backward compute is still in
+    flight is *hidden*; whatever sticks out past the end of compute is
+    *exposed* and is the only comm the step actually pays for.
+    """
+
+    total_s: float               # overlapped wall time (end of last bucket)
+    sequential_s: float          # barrier baseline: compute + monolithic comm
+    compute_s: float             # backward compute total
+    comm_s: float                # sum of bucket wire times
+    overhead_s: float            # exposed command-issue gaps (queue model)
+    exposed_comm_s: float        # comm past the end of compute
+    hidden_comm_s: float         # comm that ran under compute
+    bucket_comm_s: tuple[float, ...]   # per-bucket wire time, issue order
+    bucket_start_s: tuple[float, ...]  # per-bucket comm start on the timeline
+    queue_depth: int
+
+    @property
+    def efficiency(self) -> float:
+        """Fraction of fabric time hidden behind compute (1.0 = all)."""
+        busy = self.hidden_comm_s + self.exposed_comm_s
+        return self.hidden_comm_s / busy if busy > 0 else 1.0
+
+    @property
+    def reduction(self) -> float:
+        """Total-time reduction vs the sequential barrier baseline."""
+        if self.sequential_s <= 0:
+            return 0.0
+        return 1.0 - self.total_s / self.sequential_s
+
+    def __str__(self) -> str:
+        return (f"overlapped {self.total_s * 1e3:.3f} ms vs sequential "
+                f"{self.sequential_s * 1e3:.3f} ms "
+                f"({self.reduction * 100:.1f}% cut; "
+                f"{self.hidden_comm_s * 1e3:.3f} ms comm hidden, "
+                f"{self.exposed_comm_s * 1e3:.3f} ms exposed)")
+
+
+def estimate_overlapped(schedule: CollectiveSchedule,
+                        buckets: BucketPlan | Sequence[int],
+                        compute_s: float | Sequence[float],
+                        net: NetModel | None = None, *,
+                        queue_depth: int = 2,
+                        issue_gap_s: float = 0.85e-6,
+                        **endpoint_kw) -> OverlapEstimate:
+    """Price a bucketed, compute-overlapped execution of ``schedule``.
+
+    ``buckets`` is a ``BucketPlan`` (or raw per-bucket byte counts) in
+    issue order; ``compute_s`` is the backward compute trace — either one
+    per-bucket segment each (segment i must finish before bucket i's grads
+    exist) or a scalar total split proportionally to bucket bytes.
+
+    ``queue_depth`` is the RDMA command queue's in-flight slots
+    (``RdmaEndpoint.queue_depth``): with >= 2 slots the next bucket's
+    command is prefetched while the fabric is busy, hiding the issue gap
+    exactly like the second DMA engine of §2.1; a depth-1 queue pays
+    ``issue_gap_s`` per bucket.  The sequential baseline is the monolithic
+    post-backward barrier: all compute, then ONE schedule moving the whole
+    payload.
+    """
+    net = net or NetModel()
+    nbytes = (tuple(buckets.bucket_nbytes)
+              if isinstance(buckets, BucketPlan) else tuple(buckets))
+    if queue_depth < 1:
+        raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+    nb = len(nbytes)
+    if isinstance(compute_s, (int, float)):
+        total = sum(nbytes)
+        comp = (tuple(float(compute_s) * b / total for b in nbytes)
+                if total > 0 else tuple(0.0 for _ in nbytes))
+    else:
+        comp = tuple(float(c) for c in compute_s)
+        if len(comp) != nb:
+            raise ValueError(
+                f"compute trace has {len(comp)} segments for {nb} buckets")
+    comm = tuple(estimate(schedule, b, net, **endpoint_kw).total_s
+                 for b in nbytes)
+    compute_total = sum(comp)
+    t = 0.0            # fabric busy-until
+    elapsed = 0.0      # compute frontier
+    starts, gaps = [], []
+    for c_seg, m_s in zip(comp, comm):
+        elapsed += c_seg           # this bucket's grads exist now
+        if queue_depth >= 2 and t > elapsed:
+            start, gap = t, 0.0    # command was prefetched while fabric busy
+        else:
+            start = max(t, elapsed) + issue_gap_s
+            gap = issue_gap_s      # fabric idle at issue: gap is exposed
+        starts.append(start)
+        gaps.append(gap)
+        t = start + m_s
+    total_s = max(t, compute_total)
+    exposed = total_s - compute_total
+    busy = sum(comm) + sum(gaps)
+    hidden = max(0.0, busy - exposed)
+    seq = (compute_total + issue_gap_s
+           + estimate(schedule, sum(nbytes), net, **endpoint_kw).total_s
+           if nbytes else compute_total)
+    return OverlapEstimate(
+        total_s=total_s, sequential_s=seq, compute_s=compute_total,
+        comm_s=sum(comm), overhead_s=sum(gaps), exposed_comm_s=exposed,
+        hidden_comm_s=hidden, bucket_comm_s=comm,
+        bucket_start_s=tuple(starts), queue_depth=queue_depth)
 
 
 def algorithmic_bandwidth(schedule: CollectiveSchedule, nbytes: int,

@@ -31,7 +31,7 @@ from jax import lax
 
 from repro.core import jaxcompat
 from repro.core.fabric.schedule import (
-    A2A, AG, AR, HALO, RS, CollectiveSchedule, Phase)
+    A2A, AG, AR, HALO, RS, BucketPlan, CollectiveSchedule, Phase)
 
 
 # ----------------------------------------------------------------------------
@@ -298,6 +298,101 @@ def execute_halo_exchange(schedule: CollectiveSchedule, x: jax.Array,
     from_prev = lax.ppermute(hi, ph.axis, perm_f)
     from_next = lax.ppermute(lo, ph.axis, perm_b)
     return from_prev, from_next
+
+
+# ----------------------------------------------------------------------------
+# bucketed gradient hook — the overlap engine's executor entry point
+# ----------------------------------------------------------------------------
+
+def _bucket_identity(schedule: CollectiveSchedule, phase: Phase, m: int,
+                     metas: tuple):
+    """A tuple-identity whose VJP reduce-scatters the incoming cotangents.
+
+    The forward is a no-op; the backward executes ``schedule`` on each
+    leaf's gradient *at the point in the backward pass where that gradient
+    materialises* — the fabric rounds are therefore free to overlap the
+    remaining backward compute, exactly like the dual-DMA engine draining
+    its prefetchable command queue while the host is still producing work
+    (paper §2.1).  The returned cotangent is zeros except this rank's
+    reduced chunk at its ring slot — the pre-reduced ZeRO-1 shard, embedded
+    in a full-size buffer so it is a valid cotangent for the primal.
+    ``metas`` are static (shape, dtype) pairs for the bucket's leaves.
+    """
+
+    @jax.custom_vjp
+    def ident(*leaves):
+        return leaves
+
+    def fwd(*leaves):
+        return leaves, None
+
+    def bwd(_, gs):
+        slot = ring_slot(phase)
+        outs = []
+        for (shape, dtype), g in zip(metas, gs):
+            chunk, _ = execute_reduce_scatter(schedule, g)
+            full = jnp.zeros((chunk.shape[0] * m,), chunk.dtype)
+            full = lax.dynamic_update_slice(full, chunk,
+                                            (slot * chunk.shape[0],))
+            n = int(np.prod(shape)) if shape else 1
+            outs.append(full[:n].reshape(shape).astype(dtype))
+        return tuple(outs)
+
+    ident.defvjp(fwd, bwd)
+    return ident
+
+
+def make_bucket_grad_hook(plan: BucketPlan, schedule: CollectiveSchedule):
+    """Per-shard identity over a param tree that bucket-reduce-scatters
+    gradients inside the backward pass.
+
+    ``schedule`` must be a single-axis reduce-scatter (possibly fault-
+    rewritten).  Wrap the params fed to the differentiated loss:
+
+        hook = make_bucket_grad_hook(plan, rs_schedule)
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(hook(p), batch))(params)
+
+    ``grads`` then hold each leaf's *reduced* chunk at this rank's slice
+    (zeros elsewhere); pair with ``apex_zero1_update(pre_reduced=True)``.
+    Wire numerics match the sequential per-leaf path bit-for-bit for fp32
+    params (lower-precision params pay one extra wire-dtype cast, like any
+    bucketed DDP implementation).
+    """
+    if schedule.collective != RS:
+        raise ValueError(
+            f"bucket hook needs a reduce-scatter schedule, got "
+            f"{schedule.collective!r}")
+    if len(schedule.phases) != 1:
+        raise ValueError("bucket hook supports single-axis schedules only")
+    phase = schedule.phases[0]
+    m = max(phase.ring_size, 1)
+    if phase.ring != tuple(range(m)):
+        # a node-fault-shrunk/reordered ring changes where each rank's
+        # reduced chunk lands, but the pre-reduced ZeRO update slices at
+        # axis_index over the FULL axis — silent divergence.  Link-fault
+        # rewrites keep the identity ring and are fine; node faults must
+        # remesh (which the trainer does) rather than reroute.
+        raise ValueError(
+            f"bucket hook requires the identity ring, got {phase.ring}; "
+            "node-fault-shrunk rings change the ZeRO chunk layout")
+
+    def hook(tree):
+        leaves, treedef = jax.tree.flatten(tree)
+        if len(leaves) != plan.n_leaves:
+            raise ValueError(f"tree has {len(leaves)} leaves, plan expects "
+                             f"{plan.n_leaves}")
+        out = list(leaves)
+        for b in plan.buckets:
+            group = tuple(leaves[i] for i in b.leaves)
+            metas = tuple((jnp.shape(lf), jnp.result_type(lf))
+                          for lf in group)
+            group = _bucket_identity(schedule, phase, m, metas)(*group)
+            for i, v in zip(b.leaves, group):
+                out[i] = v
+        return jax.tree.unflatten(treedef, out)
+
+    return hook
 
 
 _EXECUTORS = {

@@ -22,8 +22,8 @@ from collections import deque
 from typing import Sequence
 
 from repro.core.fabric.schedule import (
-    A2A, AG, AR, HALO, RS, CollectiveSchedule, FaultMap, Phase, Step,
-    Transfer)
+    A2A, AG, AR, HALO, RS, Bucket, BucketPlan, CollectiveSchedule, FaultMap,
+    Phase, Step, Transfer)
 from repro.core.topology import Torus
 
 
@@ -277,6 +277,60 @@ def lower_halo_exchange(torus: Torus, axis: str, *,
         phase = Phase(HALO, name, ring, (Step(transfers),))
     return CollectiveSchedule(HALO, (name,), (dim,), torus.dims, (phase,),
                               faults, True, False)
+
+
+# ----------------------------------------------------------------------------
+# gradient bucketing (the overlap engine's lowering)
+# ----------------------------------------------------------------------------
+
+def _leaf_sizes(tree_or_sizes) -> list[int]:
+    import jax
+
+    import math
+
+    leaves = jax.tree.leaves(tree_or_sizes)
+    sizes = []
+    for leaf in leaves:
+        if isinstance(leaf, (int, float)):
+            sizes.append(int(leaf))
+        elif hasattr(leaf, "shape"):
+            sizes.append(int(math.prod(leaf.shape)))
+        else:
+            raise TypeError(f"cannot size bucket leaf {type(leaf)}")
+    return sizes
+
+
+def plan_buckets(tree_or_sizes, bucket_bytes: int, *, itemsize: int = 4,
+                 reverse: bool = True) -> BucketPlan:
+    """Lower a param tree (or flat leaf-size list) to a ``BucketPlan``.
+
+    Greedy packing in gradient-readiness order: during backward the *last*
+    parameters of the forward produce their gradients first, so leaves are
+    walked in reverse tree order by default and a bucket closes as soon as
+    it holds at least ``bucket_bytes`` of wire payload (``itemsize`` bytes
+    per element — 4 for the fp32 gradient wire the apex trainer uses).
+    One undersized trailing bucket absorbs the remainder.
+    """
+    if bucket_bytes <= 0:
+        raise ValueError(f"bucket_bytes must be > 0, got {bucket_bytes}")
+    if itemsize <= 0:
+        raise ValueError(f"itemsize must be > 0, got {itemsize}")
+    sizes = _leaf_sizes(tree_or_sizes)
+    if not sizes:
+        raise ValueError("empty param tree: nothing to bucket")
+    order = range(len(sizes) - 1, -1, -1) if reverse else range(len(sizes))
+    buckets: list[Bucket] = []
+    cur: list[int] = []
+    cur_bytes = 0
+    for i in order:
+        cur.append(i)
+        cur_bytes += sizes[i] * itemsize
+        if cur_bytes >= bucket_bytes:
+            buckets.append(Bucket(len(buckets), tuple(cur), cur_bytes))
+            cur, cur_bytes = [], 0
+    if cur:
+        buckets.append(Bucket(len(buckets), tuple(cur), cur_bytes))
+    return BucketPlan(tuple(buckets), bucket_bytes, len(sizes))
 
 
 _LOWERERS = {

@@ -129,6 +129,74 @@ class Phase:
 
 
 @dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One size-targeted group of gradient leaves issued as a unit.
+
+    ``leaves`` are flat param-tree leaf indices in *issue order* (the order
+    their gradients materialise during backward); ``nbytes`` is the wire
+    payload the bucket injects per rank when its schedule fires.
+    """
+
+    index: int
+    leaves: tuple[int, ...]
+    nbytes: int
+
+    def __post_init__(self) -> None:
+        if not self.leaves:
+            raise ValueError("empty bucket")
+        if self.nbytes < 0:
+            raise ValueError(f"negative bucket bytes {self.nbytes}")
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Gradient bucketing for compute-overlapped collective issue.
+
+    The software analogue of the APEnet+ dual-DMA prefetchable command
+    queue (paper §2.1, Fig 1): instead of one monolithic post-backward
+    collective, the payload is split into ``buckets`` whose schedules are
+    issued as soon as their gradients exist, so the fabric rounds of bucket
+    i overlap the remaining backward compute.  Lowered by
+    ``fabric.plan_buckets``; consumed by the executor's bucket grad hook,
+    the overlap cost model (``fabric.estimate_overlapped``) and the
+    trainer's apex path.
+    """
+
+    buckets: tuple[Bucket, ...]
+    bucket_bytes: int            # the size target each bucket was packed to
+    n_leaves: int                # leaves of the source param tree
+
+    def __post_init__(self) -> None:
+        seen: set[int] = set()
+        for b in self.buckets:
+            dup = seen.intersection(b.leaves)
+            if dup:
+                raise ValueError(f"leaves {sorted(dup)} in multiple buckets")
+            seen.update(b.leaves)
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(b.nbytes for b in self.buckets)
+
+    @property
+    def bucket_nbytes(self) -> tuple[int, ...]:
+        """Per-bucket wire bytes in issue order (the overlap model's input)."""
+        return tuple(b.nbytes for b in self.buckets)
+
+    def describe(self) -> str:
+        lines = [f"BucketPlan: {self.n_buckets} buckets over "
+                 f"{self.n_leaves} leaves, target {self.bucket_bytes} B"]
+        for b in self.buckets:
+            lines.append(f"  bucket {b.index}: {len(b.leaves)} leaves, "
+                         f"{b.nbytes / 1e6:.3f} MB")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
 class CollectiveSchedule:
     """A collective lowered to explicit neighbour transfers.
 

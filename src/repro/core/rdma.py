@@ -24,7 +24,6 @@ import dataclasses
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 from jax import lax
 
 from repro.core import apelink, jaxcompat
@@ -91,16 +90,29 @@ class RdmaEndpoint:
     """
 
     def __init__(self, torus: Torus, rank: int, *, tlb_entries: int = 512,
-                 engines: int = 2,
+                 engines: int = 2, cq_slots: int | None = None,
                  net: apelink.NetModel | None = None) -> None:
         self.torus = torus
         self.rank = rank
         self.engines = engines
+        # prefetchable command queue (§2.1): in-flight descriptor slots.
+        # Two per engine by default — one draining, one prefetched — which
+        # is what lets the second engine start without waiting for the
+        # host.  ``fabric.estimate_overlapped`` consumes this as its
+        # ``queue_depth``: depth 1 exposes the issue gap on every bucket.
+        self.cq_slots = cq_slots if cq_slots is not None else 2 * engines
+        if self.cq_slots < 1:
+            raise ValueError(f"cq_slots must be >= 1, got {self.cq_slots}")
         self.tlb = Tlb(entries=tlb_entries)
         self.net = net or apelink.NetModel()
         self._regions: dict[int, Region] = {}
         self._next = 1
         self._next_vaddr = 1 << 20
+
+    @property
+    def queue_depth(self) -> int:
+        """Command-queue depth feeding the fabric overlap model."""
+        return self.cq_slots
 
     # -- registration ----------------------------------------------------------
     def register(self, nbytes: int) -> Region:

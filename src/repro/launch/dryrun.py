@@ -27,13 +27,11 @@ Usage:
 import argparse
 import dataclasses
 import json
-import re
 import sys
 import time
 import traceback
 from pathlib import Path
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp

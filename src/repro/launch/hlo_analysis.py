@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Iterable
 
 # ---------------------------------------------------------------------------
 # array-literal parsing

@@ -16,7 +16,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as kref
-from repro.models import common
 from repro.models.common import ArchCfg, apply_rope, dense_init
 
 

@@ -11,7 +11,6 @@ the ssm/hybrid archs are the only ones that run the long_500k shape: a
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

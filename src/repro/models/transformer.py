@@ -14,7 +14,6 @@ The paged decode path (the §2.2 TLB adaptation) lives in serving/engine.py.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ version of the same math (runtime/trainer.py wires it into shard_map).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -109,13 +108,21 @@ def apex_zero1_init(params, dp: int):
 
 
 def apex_zero1_update(cfg: AdamWConfig, grads, state, params, *,
-                      axis_name: str, rs_schedule=None, ag_schedule=None):
+                      axis_name: str, rs_schedule=None, ag_schedule=None,
+                      pre_reduced: bool = False):
     """Per-shard code (inside shard_map).  grads/params are the full
     (replicated w.r.t. the DP axis) values; moments are 1/N slices.
 
     ``rs_schedule``/``ag_schedule`` are optional pre-lowered (possibly
     fault-rewritten) ``fabric.CollectiveSchedule`` objects for the gradient
-    reduce-scatter and parameter all-gather."""
+    reduce-scatter and parameter all-gather.
+
+    ``pre_reduced=True`` is the overlap-engine contract: gradients were
+    already reduce-scattered inside the backward pass by the fabric's
+    bucket grad hook (``fabric.make_bucket_grad_hook``) — each leaf holds
+    this rank's reduced chunk at its ring slot (zeros elsewhere), so the
+    update only slices its shard out instead of running the collective
+    again."""
     from repro.core import collectives as C
 
     step = state["step"] + 1
@@ -128,9 +135,20 @@ def apex_zero1_update(cfg: AdamWConfig, grads, state, params, *,
     bc2 = 1 - b2 ** step.astype(jnp.float32)
 
     def upd(g, m, v, p):
-        # mean gradient shard for this rank (ring reduce-scatter)
-        gshard = C.ring_reduce_scatter(g.astype(jnp.float32), axis_name,
-                                       mean=True, schedule=rs_schedule)
+        if pre_reduced:
+            # bucket hook already ran the ring RS inside backward: slice
+            # this rank's chunk (the rest of the buffer is zeros)
+            from repro.core import jaxcompat as _jc
+            n_ = _jc.axis_size(axis_name)
+            chunk_ = m.shape[0]
+            gflat = g.reshape(-1).astype(jnp.float32)
+            gshard = jax.lax.dynamic_slice(
+                jnp.pad(gflat, (0, chunk_ * n_ - gflat.size)),
+                (jax.lax.axis_index(axis_name) * chunk_,), (chunk_,))
+        else:
+            # mean gradient shard for this rank (ring reduce-scatter)
+            gshard = C.ring_reduce_scatter(g.astype(jnp.float32), axis_name,
+                                           mean=True, schedule=rs_schedule)
         pflat = p.reshape(-1)
         m = b1 * m + (1 - b1) * gshard
         v = b2 * v + (1 - b2) * gshard * gshard

@@ -24,7 +24,6 @@ the KV-cache sequence dim shards over "data" instead: SP-style decode).
 """
 from __future__ import annotations
 
-from typing import Sequence
 
 import numpy as np
 

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
+from typing import Callable
 
 import numpy as np
 
@@ -34,14 +34,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointStore
 from repro.core import collectives as C
-from repro.core import fabric, jaxcompat
-from repro.core.lofamo import Health, LofamoSim
+from repro.core import fabric, hw, jaxcompat
+from repro.core.lofamo import LofamoSim
+from repro.core.rdma import RdmaEndpoint
 from repro.core.topology import Torus
 from repro.data import SyntheticTokens, make_batch_arrays
 from repro.models import api
 from repro.models.common import ArchCfg
 from repro.optim import AdamWConfig, adamw_init, adamw_update
-from repro.optim.adamw import apex_zero1_init, apex_zero1_update
+from repro.optim.adamw import apex_zero1_update
 from repro.parallel import sharding
 
 
@@ -69,6 +70,14 @@ class TrainerConfig:
     # lost steps, just a higher predicted hop cost.  Node faults always
     # checkpoint-restart on an elastically re-meshed machine.
     fault_mode: str = "remesh"
+    # overlap engine (apex comm only): bucket the gradient reduce-scatter
+    # (fabric.plan_buckets) and issue each bucket's schedule inside the
+    # backward pass via the fabric bucket grad hook, so the ppermute
+    # rounds overlap the remaining backward compute — the schedule-level
+    # analogue of the §2.1 dual-DMA prefetchable command queue.  Numerics
+    # are identical to the sequential step (fp32 params: bitwise).
+    overlap: bool = False
+    bucket_mb: float = 4.0          # bucket size target (MB of fp32 grads)
     wd_period: float = 0.5          # LO|FA|MO watchdog period (seconds)
     straggler_factor: float = 3.0   # step slower than this x median -> flag
     seed: int = 0
@@ -100,10 +109,16 @@ class Trainer:
             dims = (1,)
         self.torus = Torus(dims)
         self.lofamo = LofamoSim(self.torus, wd_period=tcfg.wd_period)
+        # RDMA endpoint twin: its command-queue depth feeds the overlap
+        # model (prefetchable queue = issue gaps hidden between buckets)
+        self.rdma = RdmaEndpoint(self.torus, rank=0)
         self._handled_faults: set[int] = set()
         self._handled_links: set[tuple[int, int]] = set()
         self._fault_map = fabric.FaultMap()
         self.predicted_comm_s: float | None = None
+        self.bucket_plan: fabric.BucketPlan | None = None
+        self.overlap_estimate: fabric.OverlapEstimate | None = None
+        self._overlap_baseline: dict | None = None
         self._build()
 
     # ------------------------------------------------------------------ build
@@ -231,35 +246,90 @@ class Trainer:
             total += fabric.estimate(scheds["ag"], chunk_bytes).total_s
         return total
 
+    def _bwd_compute_model_s(self) -> float:
+        """Modelled per-rank backward-compute seconds — the overlap model's
+        compute trace (backward ~ 2x forward = 4 * P * T FLOPs, priced at a
+        conservative 40% MFU on the target chip)."""
+        dp = self.mesh.shape[self.tcfg.dp_axis]
+        tokens = self.tcfg.batch * self.tcfg.seq_len / max(dp, 1)
+        flops = 4.0 * self.n_params * tokens
+        return flops / (hw.TPU_V5E.peak_flops_bf16 * 0.4)
+
     def _make_apex_step(self) -> None:
-        """(Re)build the jitted apex step from the current schedules."""
+        """(Re)build the jitted apex step from the current schedules.
+
+        With ``overlap=True`` the gradient reduce-scatter runs bucket by
+        bucket *inside* the backward pass (fabric bucket grad hook) and the
+        ZeRO-1 update consumes the pre-reduced shards; a sequential twin of
+        the step is also built as the measured-overlap baseline."""
         tcfg, mesh = self.tcfg, self.mesh
         axis = tcfg.dp_axis
         model, opt, remat = self.model, tcfg.opt, tcfg.remat
         scheds = self._apex_schedules()
         self.apex_schedules = scheds
         self.predicted_comm_s = self._predict_comm_s(scheds)
+        overlap = tcfg.overlap
+        self._overlap_baseline = None
+        if overlap:
+            bucket_bytes = max(int(tcfg.bucket_mb * (1 << 20)), 1)
+            self.bucket_plan = fabric.plan_buckets(self.params, bucket_bytes)
+            self.overlap_estimate = fabric.estimate_overlapped(
+                scheds["rs"], self.bucket_plan, self._bwd_compute_model_s(),
+                queue_depth=self.rdma.queue_depth)
+        else:
+            self.bucket_plan = None
+            self.overlap_estimate = None
 
-        def per_shard(params, m, v, step, batch):
-            loss, grads = jax.value_and_grad(
-                lambda p: model.train_loss(p, batch, remat=remat))(params)
-            # mean loss across DP ranks over the torus ring
-            loss = C.ring_all_reduce(loss[None], axis,
-                                     schedule=scheds["loss"])[0]
-            state = {"m": m, "v": v, "step": step}
-            params, state = apex_zero1_update(opt, grads, state, params,
-                                              axis_name=axis,
-                                              rs_schedule=scheds["rs"],
-                                              ag_schedule=scheds["ag"])
-            return params, state["m"], state["v"], state["step"], loss
+        def make_per_shard(bucketed: bool):
+            hook = (fabric.make_bucket_grad_hook(self.bucket_plan,
+                                                 scheds["rs"])
+                    if bucketed else (lambda p: p))
+
+            def per_shard(params, m, v, step, batch):
+                loss, grads = jax.value_and_grad(
+                    lambda p: model.train_loss(hook(p), batch,
+                                               remat=remat))(params)
+                # mean loss across DP ranks over the torus ring
+                loss = C.ring_all_reduce(loss[None], axis,
+                                         schedule=scheds["loss"])[0]
+                state = {"m": m, "v": v, "step": step}
+                params, state = apex_zero1_update(opt, grads, state, params,
+                                                  axis_name=axis,
+                                                  rs_schedule=scheds["rs"],
+                                                  ag_schedule=scheds["ag"],
+                                                  pre_reduced=bucketed)
+                return params, state["m"], state["v"], state["step"], loss
+
+            return per_shard
 
         in_specs = (P(), P(axis), P(axis), P(), P(axis))
         out_specs = (P(), P(axis), P(axis), P(), P())
         # check_vma off: outputs ARE replicated (post all-gather), but the
         # ppermute chain hides that from the varying-axes checker.
-        mapped = jaxcompat.shard_map(per_shard, mesh=mesh, in_specs=in_specs,
-                                     out_specs=out_specs, check_vma=False)
-        self._apex_step = jax.jit(mapped)
+        self._apex_step = jax.jit(jaxcompat.shard_map(
+            make_per_shard(overlap), mesh=mesh, in_specs=in_specs,
+            out_specs=out_specs, check_vma=False))
+        self._apex_step_seq = None
+        self._apex_compute_fn = None
+        if overlap:
+            self._apex_step_seq = jax.jit(jaxcompat.shard_map(
+                make_per_shard(False), mesh=mesh, in_specs=in_specs,
+                out_specs=out_specs, check_vma=False))
+
+            def grads_only(params, batch):
+                loss, grads = jax.value_and_grad(
+                    lambda p: model.train_loss(p, batch,
+                                               remat=remat))(params)
+                # the grads must be consumed in the output or XLA dead-code
+                # eliminates the whole backward pass and this "compute
+                # baseline" times the forward only
+                keep = sum(jnp.sum(g.astype(jnp.float32))
+                           for g in jax.tree.leaves(grads))
+                return jnp.stack([loss, keep])[None]
+
+            self._apex_compute_fn = jax.jit(jaxcompat.shard_map(
+                grads_only, mesh=mesh, in_specs=(P(), P(axis)),
+                out_specs=P(axis), check_vma=False))
 
         def step_fn(params, opt_state, batch):
             params, m, v, step, loss = self._apex_step(
@@ -268,6 +338,26 @@ class Trainer:
             return params, {"m": m, "v": v, "step": step}, {"loss": loss}
 
         self._step_fn = step_fn
+
+    def _measure_overlap_baseline(self, batch) -> dict:
+        """One-off calibration for measured overlap efficiency: wall-time
+        the sequential (barrier) apex step and the compute-only backward on
+        the live batch shapes (second run each, past jit compilation).
+        Also warms the overlapped step itself, so the step times compared
+        against these baselines never include its compile."""
+        args = (self.params, self.opt_state["m"], self.opt_state["v"],
+                self.opt_state["step"], batch)
+
+        def timed(fn, *a):
+            jax.block_until_ready(fn(*a))
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*a))
+            return time.perf_counter() - t0
+
+        seq_s = timed(self._apex_step_seq, *args)
+        compute_s = timed(self._apex_compute_fn, self.params, batch)
+        jax.block_until_ready(self._apex_step(*args))   # warm, discard
+        return {"seq_s": seq_s, "compute_s": compute_s}
 
     def _build_apex(self, key) -> None:
         """Paper-faithful DP: shard_map + explicit torus ring collectives,
@@ -326,6 +416,11 @@ class Trainer:
         sharding.set_runtime_mesh(self.mesh)
         np_batch = self.data.next_batch()
         batch = self._place_batch(np_batch)
+        if self.tcfg.comm == "apex" and self.tcfg.overlap \
+                and self._overlap_baseline is None \
+                and self._apex_step_seq is not None:
+            self._overlap_baseline = self._measure_overlap_baseline(batch)
+            t0 = time.perf_counter()  # calibration is not step time
         self.params, self.opt_state, metrics = self._step_fn(
             self.params, self.opt_state, batch)
         jax.block_until_ready(metrics["loss"])
@@ -338,6 +433,23 @@ class Trainer:
             # fabric cost model vs wall clock: the schedule's predicted
             # gradient-sync time for this step (APEnet+ NetModel pricing)
             metrics["predicted_comm_s"] = self.predicted_comm_s
+        if self.overlap_estimate is not None:
+            # overlap engine: predicted overlap efficiency (fraction of
+            # fabric time hidden behind backward compute, from the
+            # bucketed timeline model) vs the measured one (wall clock of
+            # the overlapped step against the sequential-step and
+            # compute-only calibration baselines)
+            est = self.overlap_estimate
+            metrics["overlap_eff_pred"] = est.efficiency
+            metrics["overlap_pred_reduction"] = est.reduction
+            metrics["overlap_pred_total_s"] = est.total_s
+            if self._overlap_baseline is not None:
+                base = self._overlap_baseline
+                comm_meas = max(base["seq_s"] - base["compute_s"], 1e-9)
+                eff = (base["seq_s"] - dt) / comm_meas
+                metrics["overlap_eff_measured"] = float(
+                    np.clip(eff, 0.0, 1.0))
+                metrics["seq_step_s"] = base["seq_s"]
         # straggler detection: this step vs the running median
         if len(self._step_times) >= 5:
             med = float(np.median(self._step_times[-20:]))

@@ -120,13 +120,26 @@ class PagedLM:
         self.slot_pages: dict[int, list[int]] = {}
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
+        self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
 
     # -- slot management --------------------------------------------------------
     def claim_slot(self, prompt_len: int, max_new: int) -> int:
         used = set(self.slot_pages)
-        slot = next(i for i in range(self.max_batch) if i not in used)
+        slot = next((i for i in range(self.max_batch) if i not in used),
+                    None)
+        if slot is None:
+            raise RuntimeError("no free decode slot")
         npages = -(-(prompt_len + max_new) // self.page)
-        pages = [self.allocator.alloc() for _ in range(npages)]
+        pages: list[int] = []
+        try:
+            for _ in range(npages):
+                pages.append(self.allocator.alloc())
+        except Exception:
+            # pool exhausted mid-claim: hand the partial allocation back so
+            # admission can retry cleanly once pages free up (a leak here
+            # permanently shrinks the pool)
+            self.allocator.release(pages)
+            raise
         self.slot_pages[slot] = pages
         self.page_table[slot, :npages] = pages
         self.seq_lens[slot] = 0
@@ -162,6 +175,78 @@ class PagedLM:
         k_pool = k_pool.at[:, dest[:npage_prompt]].set(kp)
         v_pool = v_pool.at[:, dest[:npage_prompt]].set(vp)
         return logits[:, -1], k_pool, v_pool
+
+    def _prefill_chunk_impl(self, params, tokens, k_pool, v_pool,
+                            page_table, slot, start_pos, n_alloc):
+        """Prefill ONE page-aligned chunk of a prompt (batch of 1).
+
+        The overlap engine's serving analogue: instead of one monolithic
+        prompt forward stalling the running decode batch, the prompt is
+        admitted in page-sized chunks interleaved with decode steps.  Each
+        chunk writes its K/V into the slot's pages and attends all cached
+        positions <= its own (causal over the page span), so the math per
+        query is identical to the whole-prompt prefill.
+
+        tokens: (1, T) with T a page multiple (final chunk right-padded);
+        start_pos: absolute position of tokens[0, 0] (page-aligned);
+        n_alloc: pages claimed for the slot — padded-chunk writes past the
+        allocation are dropped (their queries are padding, never read).
+        Returns (logits (1, T, V), k_pool, v_pool)."""
+        cfg = self.cfg
+        T = tokens.shape[1]
+        npage = T // self.page
+        hd = cfg.resolved_head_dim
+        group = cfg.n_heads // cfg.n_kv_heads
+        S_all = self.pages_per_seq * self.page
+        h = common.embed_tokens(params["embed"], tokens)
+        freqs = common.rope_freqs(cfg)
+        pos = start_pos + jnp.arange(T)
+        page0 = start_pos // self.page
+        rows = jax.lax.dynamic_slice(page_table, (slot, 0),
+                                     (1, self.pages_per_seq))[0]
+
+        def body(h, xs):
+            lp, kp, vp = xs
+            x = common.apply_norm(cfg, lp["ln1"], h)
+            q, k, v = attn_mod._project_qkv(cfg, lp["attn"], x, x)
+            q = common.apply_rope(q, pos[None], freqs)
+            k = common.apply_rope(k, pos[None], freqs)
+            dest = jax.lax.dynamic_slice(rows, (page0,), (npage,))
+            dest = jnp.where(page0 + jnp.arange(npage) < n_alloc, dest,
+                             kp.shape[0])
+            kp = kp.at[dest].set(
+                k[0].reshape(npage, self.page, cfg.n_kv_heads, hd),
+                mode="drop")
+            vp = vp.at[dest].set(
+                v[0].reshape(npage, self.page, cfg.n_kv_heads, hd),
+                mode="drop")
+            kd = kp[rows].reshape(S_all, cfg.n_kv_heads, hd)
+            vd = vp[rows].reshape(S_all, cfg.n_kv_heads, hd)
+            qf = q[0].astype(jnp.float32) * hd ** -0.5
+            kf = kd.astype(jnp.float32)
+            vf = vd.astype(jnp.float32)
+            if group > 1:
+                kf = jnp.repeat(kf, group, axis=1)
+                vf = jnp.repeat(vf, group, axis=1)
+            logits = jnp.einsum("qhd,khd->hqk", qf, kf)
+            mask = jnp.arange(S_all)[None, :] <= pos[:, None]
+            logits = jnp.where(mask[None], logits, -jnp.inf)
+            probs = jax.nn.softmax(logits, axis=-1)
+            out = jnp.einsum("hqk,khd->qhd", probs, vf)
+            a = out.astype(h.dtype).reshape(1, T, -1) @ lp["attn"]["wo"]
+            h = h + a
+            x2 = common.apply_norm(cfg, lp["ln2"], h)
+            if cfg.moe is not None:
+                m, _ = moe_mod.apply_moe(cfg, lp["moe"], x2)
+            else:
+                m = common.apply_mlp(cfg, lp["mlp"], x2)
+            return h + m, (kp, vp)
+
+        h, (k_pool, v_pool) = jax.lax.scan(body, h, (params["layers"],
+                                                     k_pool, v_pool))
+        h = common.apply_norm(cfg, params["final_norm"], h)
+        logits = common.lm_head(cfg, params["embed"], h)
+        return logits, k_pool, v_pool
 
     def _decode_impl(self, params, tokens, k_pool, v_pool, page_table,
                      seq_lens, active):
@@ -226,6 +311,27 @@ class PagedLM:
         self.seq_lens[slot] = len(prompt)
         return int(jnp.argmax(logits[0]))
 
+    def prefill_slot_chunk(self, slot: int, prompt: np.ndarray, start: int,
+                           chunk_tokens: int) -> int | None:
+        """Prefill ``prompt[start:start+chunk_tokens]`` into the slot.
+
+        ``start`` and ``chunk_tokens`` must be page multiples.  Returns the
+        first generated token when the chunk covers the prompt tail (the
+        request is then decode-ready), else None."""
+        if start % self.page or chunk_tokens % self.page:
+            raise ValueError("chunk boundaries must be page-aligned")
+        end = min(start + chunk_tokens, len(prompt))
+        toks = np.zeros((chunk_tokens,), np.int32)
+        toks[:end - start] = prompt[start:end]
+        logits, self.k_pool, self.v_pool = self._prefill_chunk(
+            self.params, jnp.asarray(toks[None]), self.k_pool, self.v_pool,
+            jnp.asarray(self.page_table), slot, start,
+            len(self.slot_pages[slot]))
+        if end < len(prompt):
+            return None
+        self.seq_lens[slot] = len(prompt)
+        return int(jnp.argmax(logits[0, len(prompt) - 1 - start]))
+
     def decode_batch(self, tokens: np.ndarray, active: np.ndarray):
         logits, self.k_pool, self.v_pool = self._decode(
             self.params, jnp.asarray(tokens[:, None].astype(np.int32)),
@@ -236,21 +342,35 @@ class PagedLM:
 
 
 class Engine:
-    """Continuous-batching loop over a PagedLM."""
+    """Continuous-batching loop over a PagedLM.
 
-    def __init__(self, lm: PagedLM) -> None:
+    ``chunked_prefill=True`` admits prompts in page-sized chunks
+    interleaved with decode steps (one chunk per prefilling request per
+    engine step), so a long prompt no longer stalls the running batch for
+    its whole forward — the serving-side overlap engine.  Tokens are
+    identical to whole-prompt prefill (same per-query attention math).
+    """
+
+    def __init__(self, lm: PagedLM, *, chunked_prefill: bool = False,
+                 prefill_chunk_pages: int = 1) -> None:
         self.lm = lm
+        self.chunked_prefill = chunked_prefill
+        self.chunk_tokens = max(prefill_chunk_pages, 1) * lm.page
         self.pending: list[Request] = []
+        self.prefilling: dict[int, Request] = {}
         self.running: dict[int, Request] = {}
         self.finished: list[Request] = []
         self.steps = 0
+        self.prefill_chunks = 0
+        self.decode_stall_s = 0.0   # non-decode work while a batch waited
         self._step_times: list[float] = []
 
     def submit(self, req: Request) -> None:
         self.pending.append(req)
 
     def _admit(self) -> None:
-        while self.pending and len(self.running) < self.lm.max_batch:
+        while self.pending and len(self.running) + len(self.prefilling) \
+                < self.lm.max_batch:
             req = self.pending.pop(0)
             try:
                 slot = self.lm.claim_slot(len(req.prompt),
@@ -259,14 +379,39 @@ class Engine:
                 self.pending.insert(0, req)
                 return
             req.slot = slot
-            first = self.lm.prefill_slot(slot, req.prompt)
-            req.out_tokens.append(first)
-            req.pos = len(req.prompt)
-            self.running[slot] = req
+            if self.chunked_prefill:
+                req.pos = 0
+                self.prefilling[slot] = req
+            else:
+                first = self.lm.prefill_slot(slot, req.prompt)
+                req.out_tokens.append(first)
+                req.pos = len(req.prompt)
+                self.running[slot] = req
+
+    def _advance_prefills(self) -> None:
+        """One page-sized chunk per prefilling request per engine step."""
+        for slot, req in list(self.prefilling.items()):
+            tok = self.lm.prefill_slot_chunk(slot, req.prompt, req.pos,
+                                             self.chunk_tokens)
+            self.prefill_chunks += 1
+            req.pos = min(req.pos + self.chunk_tokens, len(req.prompt))
+            if tok is not None:
+                req.out_tokens.append(tok)
+                req.pos = len(req.prompt)
+                del self.prefilling[slot]
+                self.running[slot] = req
 
     def step(self) -> None:
         t0 = time.perf_counter()
+        had_batch = bool(self.running)
         self._admit()
+        if self.chunked_prefill:
+            self._advance_prefills()
+        if had_batch:
+            # whole-prompt prefill (or the per-step chunk) ran while the
+            # decode batch sat idle: that gap is the admission stall the
+            # chunked path bounds at one chunk
+            self.decode_stall_s += time.perf_counter() - t0
         if not self.running:
             return
         B = self.lm.max_batch
@@ -287,8 +432,11 @@ class Engine:
                 self.finished.append(self.running.pop(slot))
 
     def run_to_completion(self, max_steps: int = 10_000) -> None:
-        while (self.pending or self.running) and self.steps < max_steps:
+        steps = 0
+        while (self.pending or self.prefilling or self.running) \
+                and steps < max_steps:
             self.step()
+            steps += 1
 
     def stats(self) -> dict:
         alloc = self.lm.allocator
@@ -304,4 +452,8 @@ class Engine:
             # per-step TP all-reduce cost a torus deployment would add
             "predicted_tp_comm_s": self.lm.predicted_tp_comm_s,
             "measured_step_s": measured,
+            # overlap engine (serving side): chunked-prefill admission
+            "chunked_prefill": self.chunked_prefill,
+            "prefill_chunks": self.prefill_chunks,
+            "decode_stall_s": self.decode_stall_s,
         }

@@ -179,6 +179,85 @@ def test_mean_and_direction_flags_survive_rewrite():
 
 
 # ---------------------------------------------------------------------------
+# overlap engine: bucket lowering + overlap-aware cost model
+# ---------------------------------------------------------------------------
+
+def test_plan_buckets_reverse_order_covers_all_leaves():
+    sizes = [100, 200, 3000, 50, 4000]
+    plan = fabric.plan_buckets(sizes, 4096, itemsize=4)
+    covered = [i for b in plan.buckets for i in b.leaves]
+    assert sorted(covered) == list(range(len(sizes)))
+    # readiness order: the LAST leaf's grads exist first in backward
+    assert plan.buckets[0].leaves[0] == len(sizes) - 1
+    assert plan.total_bytes == 4 * sum(sizes)
+    # every bucket but the trailing remainder meets the size target
+    for b in plan.buckets[:-1]:
+        assert b.nbytes >= plan.bucket_bytes
+
+
+def test_plan_buckets_validates():
+    with pytest.raises(ValueError):
+        fabric.plan_buckets([10], 0)
+    with pytest.raises(ValueError):
+        fabric.plan_buckets([], 1024)
+
+
+def test_estimate_overlapped_accounts_for_fabric_busy_time():
+    s = fabric.lower_reduce_scatter(Torus((8,)), ("x",), mean=True)
+    plan = fabric.plan_buckets([1 << 16] * 16, 1 << 18)
+    est = fabric.estimate_overlapped(s, plan, 0.01)
+    busy = est.comm_s + est.overhead_s
+    assert est.hidden_comm_s + est.exposed_comm_s == pytest.approx(busy)
+    assert 0.0 <= est.efficiency <= 1.0
+    assert est.total_s <= est.sequential_s + est.comm_s  # sane scale
+
+
+def test_estimate_overlapped_compute_bound_hides_almost_all_comm():
+    s = fabric.lower_reduce_scatter(Torus((8,)), ("x",), mean=True)
+    plan = fabric.plan_buckets([1 << 16] * 64, 1 << 18)
+    est = fabric.estimate_overlapped(s, plan, 10.0)
+    # only the tail bucket (and issue gaps) can stay exposed
+    assert est.efficiency > 0.9
+    assert est.total_s == pytest.approx(est.compute_s, rel=0.05)
+
+
+def test_estimate_overlapped_balanced_shape_cuts_quarter():
+    """The Fig 1 regime: comm ~ compute -> >= 25% total-time reduction."""
+    s = fabric.lower_reduce_scatter(Torus((8,)), ("x",), mean=True)
+    plan = fabric.plan_buckets([1 << 18] * 32, 1 << 20)
+    comm = fabric.estimate_overlapped(s, plan, 0.0).comm_s
+    est = fabric.estimate_overlapped(s, plan, comm)  # compute == comm
+    assert est.reduction >= 0.25
+    assert est.total_s < est.sequential_s
+
+
+def test_estimate_overlapped_single_slot_queue_never_faster():
+    s = fabric.lower_reduce_scatter(Torus((8,)), ("x",), mean=True)
+    plan = fabric.plan_buckets([1 << 14] * 128, 1 << 15)
+    t1 = fabric.estimate_overlapped(s, plan, 1e-3, queue_depth=1).total_s
+    t4 = fabric.estimate_overlapped(s, plan, 1e-3, queue_depth=4).total_s
+    assert t1 >= t4
+
+
+def test_estimate_overlapped_validates():
+    s = fabric.lower_reduce_scatter(Torus((8,)), ("x",), mean=True)
+    with pytest.raises(ValueError):
+        fabric.estimate_overlapped(s, [100, 200], [0.1], queue_depth=2)
+    with pytest.raises(ValueError):
+        fabric.estimate_overlapped(s, [100], 0.1, queue_depth=0)
+
+
+def test_bucket_grad_hook_rejects_wrong_schedules():
+    ag = fabric.lower_all_gather(Torus((8,)), ("x",))
+    plan = fabric.plan_buckets([10], 1024)
+    with pytest.raises(ValueError):
+        fabric.make_bucket_grad_hook(plan, ag)
+    rs2 = fabric.lower_reduce_scatter(Torus((4, 2)), ("x", "y"))
+    with pytest.raises(ValueError):
+        fabric.make_bucket_grad_hook(plan, rs2)
+
+
+# ---------------------------------------------------------------------------
 # LO|FA|MO link-fault inference feeding the rewriter
 # ---------------------------------------------------------------------------
 

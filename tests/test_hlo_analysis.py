@@ -6,7 +6,6 @@ scan-vs-unrolled equivalence that motivates the analyzer.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_analysis as H

@@ -1,7 +1,10 @@
 """Runtime tests: trainer loop, checkpoint integrity, data resumability,
-serving engine (paged cache vs dense-decode oracle), fault recovery.
+serving engine (paged cache vs dense-decode oracle), fault recovery,
+overlap engine (bucketed apex step, chunked prefill).
 """
 import os
+import subprocess
+import sys
 
 import numpy as np
 import pytest
@@ -21,6 +24,8 @@ from repro.serving.engine import Engine, PagedLM, Request
 CFG = ArchCfg(name="tiny", family="dense", n_layers=2, d_model=32,
               n_heads=4, n_kv_heads=2, d_ff=64, vocab=257,
               dtype=jnp.float32)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 # ----------------------------------------------------------------------------
@@ -196,6 +201,69 @@ def test_paged_engine_matches_dense_decode():
             want.append(cur)
             pos += 1
         assert req.out_tokens == want, f"request {req.rid}"
+
+
+def test_claim_slot_releases_partial_pages_on_exhaustion():
+    """Regression: a mid-claim pool exhaustion must hand already-allocated
+    pages back (a leak permanently shrinks the pool and admission can
+    never retry)."""
+    cfg = CFG
+    model = api.get_model(cfg)
+    params = model.init(jax.random.key(0))
+    lm = PagedLM(cfg, params, max_batch=2, max_seq=32, page_tokens=8,
+                 pool_pages=3)
+    free_before = len(lm.allocator.free)
+    with pytest.raises(RuntimeError):
+        lm.claim_slot(prompt_len=30, max_new=10)   # needs 5 of 3 pages
+    assert len(lm.allocator.free) == free_before
+    assert not lm.slot_pages
+    # and the slot is still claimable once the request fits
+    slot = lm.claim_slot(prompt_len=10, max_new=6)
+    assert len(lm.slot_pages[slot]) == 2
+
+
+@pytest.mark.slow
+def test_chunked_prefill_tokens_identical_to_whole_prompt():
+    """Overlap engine, serving side: page-sized chunked prefill interleaved
+    with decode must produce exactly the tokens of whole-prompt prefill."""
+    cfg = CFG
+    model = api.get_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    # lengths straddle page boundaries (page_tokens=8): 5 < 8, 21 spans 3
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (7, 21, 5, 13)]
+
+    def run(chunked):
+        lm = PagedLM(cfg, params, max_batch=4, max_seq=64, page_tokens=8)
+        eng = Engine(lm, chunked_prefill=chunked, prefill_chunk_pages=1)
+        for i, pr in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=pr, max_new_tokens=6))
+        eng.run_to_completion()
+        assert len(eng.finished) == len(prompts)
+        return {r.rid: r.out_tokens for r in eng.finished}, eng.stats()
+
+    whole, _ = run(False)
+    chunk, st = run(True)
+    assert whole == chunk
+    assert st["chunked_prefill"] and st["prefill_chunks"] >= sum(
+        -(-len(p) // 8) for p in prompts)
+
+
+@pytest.mark.slow
+def test_overlap_trainer_multidevice_equivalence():
+    """Bucketed-overlapped apex step bitwise-matches the sequential step
+    (8-device DP ring), stats report overlap efficiency, and the engine
+    survives a link-fault reroute — see tests/overlap_checks.py."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "overlap_checks.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, \
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL OVERLAP CHECKS PASSED" in proc.stdout
 
 
 @pytest.mark.slow
