@@ -23,6 +23,7 @@ comm split consistent with the timeline.
 from __future__ import annotations
 
 from repro.core import fabric
+from repro.core.hw import PAPER_GPU_EFF_FLOPS as GPU_EFF_FLOPS
 from repro.core.rdma import RdmaEndpoint
 from repro.core.topology import Torus
 
@@ -31,9 +32,8 @@ N_LAYERS = 24
 LAYER_PARAMS = 5_000_000       # ~125M params total (24 layers + head)
 HEAD_PARAMS = 5_000_000
 TOKENS_PER_RANK = 1024
-# paper-era accelerator (Fermi/Kepler-class) at a conservative 40% MFU;
-# backward ~ 2x forward = 4 FLOPs per param per token
-GPU_EFF_FLOPS = 4.0e12 * 0.4
+# backward ~ 2x forward = 4 FLOPs per param per token at the shared
+# paper-era rate (hw.PAPER_GPU_EFF_FLOPS)
 BUCKET_MB = 16
 
 

@@ -41,10 +41,10 @@ if [ "$LANE" = "full" ]; then
     echo "[ci] benchmarks (all modules)"
     python -m benchmarks.run
 else
-    echo "[ci] tier-1 tests (fast lane: -m 'not slow')"
-    python -m pytest -x -q -m "not slow"
+    echo "[ci] tier-1 tests (fast lane: -m 'not slow', small hypothesis budget)"
+    HYPOTHESIS_PROFILE=ci python -m pytest -x -q -m "not slow"
     echo "[ci] benchmarks (quick set)"
-    python -m benchmarks.run overlap dma_overlap fabric_cost
+    python -m benchmarks.run overlap dma_overlap fabric_cost migration
 fi
 
 echo "[ci] bench regression gate"

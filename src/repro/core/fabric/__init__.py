@@ -25,13 +25,14 @@ from repro.core.fabric.fault import (UnroutableError, fault_map_from_lofamo,
 from repro.core.fabric.lower import (axis_fault_penalty, live_ring, lower,
                                      lower_all_gather, lower_all_reduce,
                                      lower_all_to_all, lower_halo_exchange,
-                                     lower_reduce_scatter, plan_buckets)
-from repro.core.fabric.schedule import (A2A, AG, AR, HALO, RS, Bucket,
+                                     lower_p2p, lower_reduce_scatter,
+                                     plan_buckets)
+from repro.core.fabric.schedule import (A2A, AG, AR, HALO, P2P, RS, Bucket,
                                         BucketPlan, CollectiveSchedule,
                                         FaultMap, Phase, Step, Transfer)
 
 __all__ = [
-    "A2A", "AG", "AR", "HALO", "RS",
+    "A2A", "AG", "AR", "HALO", "P2P", "RS",
     "Bucket", "BucketPlan", "CollectiveSchedule", "FaultMap", "Phase",
     "Step", "Transfer",
     "CostEstimate", "OverlapEstimate", "algorithmic_bandwidth", "estimate",
@@ -42,5 +43,5 @@ __all__ = [
     "UnroutableError", "fault_map_from_lofamo", "rewrite",
     "axis_fault_penalty", "live_ring", "lower", "lower_all_gather",
     "lower_all_reduce", "lower_all_to_all", "lower_halo_exchange",
-    "lower_reduce_scatter", "plan_buckets",
+    "lower_p2p", "lower_reduce_scatter", "plan_buckets",
 ]

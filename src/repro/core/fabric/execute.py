@@ -406,4 +406,10 @@ _EXECUTORS = {
 
 def execute(schedule: CollectiveSchedule, x: jax.Array, **kw):
     """Dispatch on the schedule's collective kind (per-shard code)."""
-    return _EXECUTORS[schedule.collective](schedule, x, **kw)
+    fn = _EXECUTORS.get(schedule.collective)
+    if fn is None:
+        raise ValueError(
+            f"schedule kind {schedule.collective!r} has no per-shard "
+            "executor (p2p schedules are priced and fault-rewritten; their "
+            "data movement is modelled by the RDMA layer's put_pages)")
+    return fn(schedule, x, **kw)

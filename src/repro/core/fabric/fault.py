@@ -22,7 +22,7 @@ from __future__ import annotations
 
 from repro.core.fabric import lower as L
 from repro.core.fabric.schedule import (
-    A2A, AG, AR, HALO, RS, CollectiveSchedule, FaultMap)
+    A2A, AG, AR, HALO, P2P, RS, CollectiveSchedule, FaultMap)
 from repro.core.topology import Torus
 
 UnroutableError = L.UnroutableError
@@ -84,4 +84,10 @@ def rewrite(schedule: CollectiveSchedule, faults: FaultMap, *,
     if schedule.collective == HALO:
         return L.lower_halo_exchange(torus, axes[0], axis_dims=dims,
                                      faults=faults)
+    if schedule.collective == P2P:
+        # the route annotation carries the endpoints: first rank of the
+        # first phase's ring, last rank of the last phase's ring
+        route_src = schedule.phases[0].ring[0]
+        route_dst = schedule.phases[-1].ring[-1]
+        return L.lower_p2p(torus, route_src, route_dst, faults=faults)
     raise ValueError(f"unknown collective {schedule.collective!r}")

@@ -22,8 +22,8 @@ from collections import deque
 from typing import Sequence
 
 from repro.core.fabric.schedule import (
-    A2A, AG, AR, HALO, RS, Bucket, BucketPlan, CollectiveSchedule, FaultMap,
-    Phase, Step, Transfer)
+    A2A, AG, AR, HALO, P2P, RS, Bucket, BucketPlan, CollectiveSchedule,
+    FaultMap, Phase, Step, Transfer)
 from repro.core.topology import Torus
 
 
@@ -35,22 +35,34 @@ class UnroutableError(RuntimeError):
 # fabric graph helpers (the only hop math in the repo)
 # ----------------------------------------------------------------------------
 
+def _bfs_path(torus: Torus, src: int, dst: int,
+              faults: FaultMap) -> list[int] | None:
+    """Shortest surviving rank path src -> dst inclusive, else None — the
+    ONE fault-aware BFS (collective detour pricing and p2p routing both
+    ride it, so their views of the surviving graph can never diverge)."""
+    if src == dst:
+        return [src]
+    prev = {src: src}
+    frontier = deque([src])
+    while frontier:
+        r = frontier.popleft()
+        for n in torus.neighbors(r):
+            if n in prev or not faults.link_ok(r, n):
+                continue
+            prev[n] = r
+            if n == dst:
+                path = [dst]
+                while path[-1] != src:
+                    path.append(prev[path[-1]])
+                return path[::-1]
+            frontier.append(n)
+    return None
+
+
 def _bfs_hops(torus: Torus, src: int, dst: int, faults: FaultMap) -> int | None:
     """Shortest surviving-path length between two live ranks, else None."""
-    if src == dst:
-        return 0
-    seen = {src}
-    frontier = deque([(src, 0)])
-    while frontier:
-        r, d = frontier.popleft()
-        for n in torus.neighbors(r):
-            if n in seen or not faults.link_ok(r, n):
-                continue
-            if n == dst:
-                return d + 1
-            seen.add(n)
-            frontier.append((n, d + 1))
-    return None
+    path = _bfs_path(torus, src, dst, faults)
+    return None if path is None else len(path) - 1
 
 
 def _lanes(torus: Torus, dim: int):
@@ -279,6 +291,53 @@ def lower_halo_exchange(torus: Torus, axis: str, *,
                               faults, True, False)
 
 
+def lower_p2p(torus: Torus, src: int, dst: int, *,
+              faults: FaultMap | None = None) -> CollectiveSchedule:
+    """Point-to-point lowering: one multi-hop unicast as a schedule.
+
+    An RDMA PUT from rank ``src`` to rank ``dst`` is a single fabric
+    message forwarded hop-by-hop by the routers along the dimension-ordered
+    (X then Y then Z) minimal path — the endpoints pay injection/reception
+    once, every intermediate router adds ``t_hop`` (paper §1).  The
+    schedule therefore carries ONE transfer whose ``hops`` is the route
+    length; ``fabric.estimate`` prices it exactly like a collective's
+    detour transfer.
+
+    Unlike the axis-wise collectives, a unicast is a *global* route: the
+    phase ``ring`` lists the fabric **ranks** visited in forwarding order
+    (route annotation, not axis positions) and the transfer perm is the
+    single (src, dst) rank pair.  ``fault.rewrite`` re-lowers from that
+    annotation: under a ``FaultMap`` the route becomes the BFS shortest
+    path over the surviving fabric — the dimension-ordered router's detour
+    — and ``UnroutableError`` is raised when src/dst are separated (or an
+    endpoint itself is dead).
+    """
+    faults = faults or FaultMap()
+    for r in (src, dst):
+        if not 0 <= r < torus.size:
+            raise ValueError(f"rank {r} out of range for torus {torus.dims}")
+        if r in faults.dead_nodes:
+            raise UnroutableError(f"p2p endpoint rank {r} is dead")
+    if not faults:
+        route = torus.route(src, dst)
+    else:
+        path = _bfs_path(torus, src, dst, faults)
+        if path is None:
+            raise UnroutableError(
+                f"no surviving route {src} -> {dst}: the fault map "
+                "partitions the fabric")
+        route = path
+    hops = len(route) - 1
+    if hops == 0:
+        steps: tuple[Step, ...] = ()
+    else:
+        steps = (Step((Transfer(perm=((src, dst),), frac=1.0, hops=hops,
+                                combine="write"),)),)
+    phase = Phase(P2P, "route", tuple(route), steps)
+    return CollectiveSchedule(P2P, ("route",), (0,), torus.dims, (phase,),
+                              faults, False, False)
+
+
 # ----------------------------------------------------------------------------
 # gradient bucketing (the overlap engine's lowering)
 # ----------------------------------------------------------------------------
@@ -351,4 +410,8 @@ def lower(collective: str, torus: Torus, axes: Sequence[str],
             raise ValueError(f"{collective} is single-axis, got {axes}")
         fn = lower_all_to_all if collective == A2A else lower_halo_exchange
         return fn(torus, axes[0], **kw)
+    if collective == P2P:
+        raise ValueError(
+            "p2p is rank-addressed, not axis-addressed; "
+            "use lower_p2p(torus, src, dst)")
     raise ValueError(f"unknown collective {collective!r}")

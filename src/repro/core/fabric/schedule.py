@@ -41,9 +41,10 @@ AG = "all_gather"
 AR = "all_reduce"
 A2A = "all_to_all"
 HALO = "halo_exchange"
+P2P = "p2p"
 
-PHASE_KINDS = (RS, AG, A2A, HALO)
-COLLECTIVES = (RS, AG, AR, A2A, HALO)
+PHASE_KINDS = (RS, AG, A2A, HALO, P2P)
+COLLECTIVES = (RS, AG, AR, A2A, HALO, P2P)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -40,6 +40,14 @@ TPU_V5E = ChipSpec(
     vmem_bytes=128 * 1024**2,
 )
 
+# Paper-era accelerator (Fermi/Kepler-class) at a conservative 40% MFU —
+# the ONE modelled compute rate every paper-twin benchmark prices against:
+# benchmarks/overlap.py (backward compute behind the bucketed sync) and the
+# serving cluster's re-prefill stall model (benchmarks/migration.py gate).
+PAPER_GPU_PEAK_FLOPS = 4.0e12
+PAPER_GPU_MFU = 0.4
+PAPER_GPU_EFF_FLOPS = PAPER_GPU_PEAK_FLOPS * PAPER_GPU_MFU
+
 # ----------------------------------------------------------------------------
 # APEnet+ board generations (paper §2.3, §3, §6) — used by the paper-claims
 # benchmarks, NOT by the TPU roofline.  Bandwidths in bytes/s.

@@ -127,10 +127,15 @@ class RdmaEndpoint:
         for off in range(0, region.nbytes, PAGE_BYTES):
             self.tlb.invalidate(region.vaddr + off)
 
+    def _check_registered(self, region: Region) -> None:
+        """The region must be one THIS endpoint registered (a handle number
+        alone can collide with another card's region)."""
+        if self._regions.get(region.handle) is not region:
+            raise KeyError("RDMA to a region this endpoint never registered")
+
     def translate_region(self, region: Region) -> float:
         """Translate every page of a region; returns modelled cost (s)."""
-        if region.handle not in self._regions:
-            raise KeyError("RDMA to unregistered region")
+        self._check_registered(region)
         cost = 0.0
         for off in range(0, max(region.nbytes, 1), PAGE_BYTES):
             _, c = self.tlb.translate(region.vaddr + off)
@@ -166,3 +171,83 @@ class RdmaEndpoint:
         hops = self.torus.hop_distance(self.rank, dst)
         t += self.net.latency(nbytes, hops=hops)
         return t
+
+    # -- bulk region-to-region transfers (KV-page migration) --------------------
+    def put_pages(self, dst: int, region: Region, pages: Sequence[int], *,
+                  page_nbytes: int = PAGE_BYTES,
+                  dst_endpoint: "RdmaEndpoint | None" = None,
+                  dst_region: Region | None = None,
+                  dst_pages: Sequence[int] | None = None,
+                  faults=None, schedule=None) -> float:
+        """Bulk one-sided PUT of selected ``page_nbytes``-sized pages of a
+        registered region to rank ``dst``; returns the modelled seconds.
+
+        The wire leg is a ``fabric.lower_p2p`` schedule priced by
+        ``fabric.estimate`` — multi-hop dimension-ordered unicast on a
+        healthy fabric, the BFS detour of the same schedule under a
+        ``FaultMap`` (pass ``faults``), ``UnroutableError`` when the map
+        partitions the fabric.  A caller that already lowered the route
+        (e.g. for hop reporting) passes it as ``schedule`` to skip the
+        re-derivation.  On top of the wire: TX-side translation of
+        every TLB granule the pages span (§2.2 — hot after registration)
+        and the host-interface DMA drain (§2.1 dual-engine model).  When
+        the caller hands over the receiving card (``dst_endpoint`` +
+        ``dst_region`` [+ ``dst_pages``]), the RX-side translation of the
+        landing byte range is charged to *its* TLB — the §2.2 critical
+        path of the receive DMA.  (Per-``PAGE_BYTES``-granule, the same
+        model as ``translate_region``; the serving allocator's
+        one-entry-per-KV-page registration shortcut is separate and
+        coarser.)
+        """
+        self._check_registered(region)
+        if page_nbytes <= 0:
+            raise ValueError(f"page_nbytes must be > 0, got {page_nbytes}")
+        t = self._translate_pages(self.tlb, region, pages, page_nbytes)
+        nbytes = len(pages) * page_nbytes
+        t += self.transfer_time(nbytes)
+        from repro.core import fabric
+        sched = schedule if schedule is not None else fabric.lower_p2p(
+            self.torus, self.rank, dst, faults=faults)
+        t += fabric.estimate(sched, nbytes, self.net).total_s
+        if dst_endpoint is not None and dst_region is not None:
+            dst_endpoint._check_registered(dst_region)
+            t += self._translate_pages(
+                dst_endpoint.tlb, dst_region,
+                dst_pages if dst_pages is not None else pages, page_nbytes)
+        return t
+
+    def get_time(self, src: int, nbytes: int, region: Region, *,
+                 faults=None) -> float:
+        """Modelled one-sided GET of ``nbytes`` from rank ``src`` into a
+        local registered region: descriptor out, payload back.
+
+        A GET is a PUT initiated by the reader — a descriptor-sized request
+        travels to ``src``, whose card streams the payload back along the
+        reversed route; the local landing buffer is translated before the
+        RX DMA can scatter into it.  Both legs reroute around ``faults``
+        like ``put_pages``.
+        """
+        from repro.core import fabric
+        t = self.translate_region(region)
+        req = fabric.lower_p2p(self.torus, self.rank, src, faults=faults)
+        back = fabric.lower_p2p(self.torus, src, self.rank, faults=faults)
+        t += fabric.estimate(req, 64, self.net).total_s   # GET descriptor
+        t += self.transfer_time(nbytes)                   # remote DMA drain
+        t += fabric.estimate(back, nbytes, self.net).total_s
+        return t
+
+    @staticmethod
+    def _translate_pages(tlb: Tlb, region: Region, pages: Sequence[int],
+                         page_nbytes: int) -> float:
+        """Translate every TLB granule the listed pages span."""
+        cost = 0.0
+        for p in pages:
+            if p < 0 or (p + 1) * page_nbytes > region.nbytes:
+                raise ValueError(
+                    f"page {p} ({page_nbytes} B) outside region of "
+                    f"{region.nbytes} bytes")
+            base = region.vaddr + p * page_nbytes
+            for off in range(0, page_nbytes, PAGE_BYTES):
+                _, c = tlb.translate(base + off)
+                cost += c
+        return cost

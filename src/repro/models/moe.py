@@ -42,13 +42,20 @@ def capacity(cfg: ArchCfg, n_tokens: int) -> int:
     return max(c, m.top_k)
 
 
-def apply_moe(cfg: ArchCfg, p, x):
-    """x: (B, S, d) -> (y: (B, S, d), aux_loss: scalar fp32)."""
+def apply_moe(cfg: ArchCfg, p, x, *, dropless: bool = False):
+    """x: (B, S, d) -> (y: (B, S, d), aux_loss: scalar fp32).
+
+    ``dropless=True`` sizes every expert's buffer to the full token count,
+    so no token is ever capacity-dropped.  Serving paths require this:
+    with capacity drops a token's output depends on which other tokens
+    share the forward (C scales with T), which would make decode results
+    vary with batching and prefill chunking.  Training keeps the capacity
+    model (the paper-relevant comm-bounded dispatch)."""
     m = cfg.moe
     B, S, d = x.shape
     T = B * S
     E, K = m.n_experts, m.top_k
-    C = capacity(cfg, T)
+    C = T if dropless else capacity(cfg, T)
     xt = x.reshape(T, d)
 
     # --- routing (fp32 for a stable softmax) ---------------------------------

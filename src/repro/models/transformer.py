@@ -227,10 +227,13 @@ def train_loss(cfg: ArchCfg, params, batch, *, remat: bool = True):
 # ----------------------------------------------------------------------------
 
 def prefill(cfg: ArchCfg, params, batch, *, max_len: int | None = None,
-            remat: bool = True, return_hidden: bool = False):
+            remat: bool = True, return_hidden: bool = False,
+            moe_dropless: bool = False):
     """Forward + build the dense KV cache.  Returns (logits_last, cache)
     [+ final hidden states when return_hidden — serving engines pick their
-    own logits position for padded prompts]."""
+    own logits position for padded prompts].  ``moe_dropless`` forces the
+    capacity-free MoE dispatch serving requires (tokens must not depend on
+    what else shares the forward)."""
     h, _ = embed_inputs(cfg, params, batch)
     B, S, _ = h.shape
     # VLM prefix embeddings extend S beyond the token budget: the cache must
@@ -244,10 +247,13 @@ def prefill(cfg: ArchCfg, params, batch, *, max_len: int | None = None,
                                    causal=True)
         h = h + a
         if cfg.moe is not None:
-            apply = moe.apply_moe_ep if cfg.moe_impl == "ep_a2a" else \
-                moe.apply_moe
-            m, _ = apply(cfg, lp["moe"],
-                         common.apply_norm(cfg, lp["ln2"], h))
+            x2 = common.apply_norm(cfg, lp["ln2"], h)
+            if moe_dropless:
+                m, _ = moe.apply_moe(cfg, lp["moe"], x2, dropless=True)
+            elif cfg.moe_impl == "ep_a2a":
+                m, _ = moe.apply_moe_ep(cfg, lp["moe"], x2)
+            else:
+                m, _ = moe.apply_moe(cfg, lp["moe"], x2)
         else:
             m = common.apply_mlp(cfg, lp["mlp"],
                                  common.apply_norm(cfg, lp["ln2"], h))

@@ -1,0 +1,279 @@
+"""Multi-node serving cluster with live RDMA KV-page migration.
+
+The paper's headline capability — zero-copy, low-latency GPU-to-GPU RDMA
+across the 3D torus (GPUDirect P2P, arXiv:1307.8276 measures exactly this
+path) — is what lets a serving deployment move a *running* request between
+nodes without restarting its decode: the request's KV-cache pages are the
+whole decode state, and they travel as one bulk dimension-ordered RDMA PUT
+(``RdmaEndpoint.put_pages`` over a ``fabric.lower_p2p`` schedule).
+
+Topology: every serving node is a rank of one shared ``Torus`` (the
+cluster fabric); ranks without a serving node are pass-through routers.
+Each node owns a full model replica (``PagedLM`` + ``Engine``); a router
+in front admits each request to the least-loaded node.
+
+Live migration of a slot from node A to node B:
+
+  1. ``A.lm.export_slot``   — snapshot the slot's KV pages (logical order)
+                              and sequence length;
+  2. ``B.lm.import_slot``   — claim fresh pages on B, land the contents
+                              (fails cleanly when B is full: the request
+                              stays on A untouched);
+  3. ``A.endpoint.put_pages(B, ...)`` — model the wire: TLB translation on
+                              both cards, host-interface DMA, and the
+                              multi-hop unicast priced by ``fabric.estimate``
+                              — rewritten by the fault machinery, so a dead
+                              link on the route becomes a BFS detour
+                              (``hops`` up, tokens unchanged) and a
+                              partitioned fabric raises ``UnroutableError``;
+  4. the request detaches from A's batch, frees A's pages, and resumes
+     decode on B **bitwise-identically** to the unmigrated run (the page
+     contents + seq_len are the complete decode state; positions past
+     seq_len are masked on both nodes).
+
+The alternative to migrating ~len(context) * bytes_per_token of KV is
+re-prefilling the context on B — a whole-prompt forward that stalls B's
+running decode batch.  ``MigrationReport`` carries both modelled numbers;
+``benchmarks/migration.py`` gates migration being the cheaper move.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+import jax
+
+from repro.core import fabric
+from repro.core.hw import PAPER_GPU_EFF_FLOPS as GPU_EFF_FLOPS
+from repro.core.topology import Torus
+from repro.models.common import ArchCfg
+from repro.serving.engine import Engine, PagedLM, Request
+
+
+def reprefill_stall_s(n_params: int, context_tokens: int,
+                      flops: float = GPU_EFF_FLOPS) -> float:
+    """Modelled decode stall of re-prefilling ``context_tokens`` from
+    scratch on the destination (2 FLOPs per param per token forward, at
+    the paper-era rate of ``hw.PAPER_GPU_EFF_FLOPS``) — the cost
+    migration avoids."""
+    return 2.0 * n_params * context_tokens / flops
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationReport:
+    """One slot migration: what moved, over what route, at what cost."""
+
+    rid: int
+    src: int                     # torus rank of the source node
+    dst: int                     # torus rank of the destination node
+    n_pages: int
+    nbytes: int                  # KV payload on the wire
+    hops: int                    # route length actually taken
+    min_hops: int                # healthy-fabric dimension-ordered distance
+    modelled_s: float            # put_pages: translation + DMA + wire
+    reprefill_s: float           # the decode stall migrating avoided
+
+    @property
+    def rerouted(self) -> bool:
+        return self.hops > self.min_hops
+
+    @property
+    def speedup(self) -> float:
+        """Avoided stall per second of modelled migration time."""
+        return self.reprefill_s / self.modelled_s if self.modelled_s else 0.0
+
+
+@dataclasses.dataclass
+class ClusterNode:
+    """One serving node: a torus rank owning a model replica."""
+
+    rank: int
+    lm: PagedLM
+    engine: Engine
+
+    @property
+    def load(self) -> int:
+        return self.engine.load
+
+
+class ServingCluster:
+    """N model replicas on one torus fabric behind a least-loaded router.
+
+    ``node_ranks`` selects which torus ranks carry a serving node (default:
+    all of them) — a fabric larger than the serving set leaves the spare
+    ranks as pure routers, exactly like compute-less switch hops.
+    """
+
+    def __init__(self, cfg: ArchCfg, params, *, torus: Torus,
+                 node_ranks: Sequence[int] | None = None,
+                 max_batch: int = 4, max_seq: int = 64,
+                 page_tokens: int = 16, pool_pages: int | None = None,
+                 chunked_prefill: bool = False) -> None:
+        self.cfg = cfg
+        self.torus = torus
+        ranks = tuple(node_ranks) if node_ranks is not None \
+            else tuple(torus.all_ranks())
+        if len(set(ranks)) != len(ranks):
+            raise ValueError(f"repeated node ranks {ranks}")
+        self.nodes: dict[int, ClusterNode] = {}
+        for r in ranks:
+            lm = PagedLM(cfg, params, max_batch=max_batch, max_seq=max_seq,
+                         page_tokens=page_tokens, pool_pages=pool_pages,
+                         torus=torus, tp_axes=(), rank=r)
+            self.nodes[r] = ClusterNode(
+                r, lm, Engine(lm, chunked_prefill=chunked_prefill))
+        self.page_nbytes = (page_tokens
+                            * self.nodes[ranks[0]].lm.bytes_per_token)
+        self.n_params = sum(int(np.prod(x.shape))
+                            for x in jax.tree.leaves(params))
+        self.faults = fabric.FaultMap()
+        self.migrations: list[MigrationReport] = []
+
+    # -- fault feed (LO|FA|MO master view) --------------------------------------
+    def fail_link(self, a: int, b: int) -> None:
+        """Mark the first-neighbour link (a, b) dead; later migrations
+        reroute around it (the fault machinery's BFS detour)."""
+        self.faults = fabric.FaultMap.normalized(
+            self.faults.dead_nodes,
+            set(self.faults.dead_links) | {(a, b)})
+
+    def clear_faults(self) -> None:
+        self.faults = fabric.FaultMap()
+
+    # -- router -----------------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        """Admit to the least-loaded node (stable tie-break: lowest rank);
+        returns the chosen rank."""
+        node = min(self.nodes.values(), key=lambda n: (n.load, n.rank))
+        node.engine.submit(req)
+        return node.rank
+
+    def step(self) -> None:
+        for node in self.nodes.values():
+            node.engine.step()
+
+    def run_to_completion(self, max_steps: int = 10_000) -> None:
+        steps = 0
+        while self.in_flight and steps < max_steps:
+            self.step()
+            steps += 1
+
+    @property
+    def in_flight(self) -> int:
+        return sum(n.load for n in self.nodes.values())
+
+    @property
+    def finished(self) -> list[Request]:
+        out: list[Request] = []
+        for node in self.nodes.values():
+            out.extend(node.engine.finished)
+        return sorted(out, key=lambda r: r.rid)
+
+    # -- live migration ---------------------------------------------------------
+    def _find_running(self, rid: int) -> tuple[ClusterNode, Request]:
+        for node in self.nodes.values():
+            for req in node.engine.running.values():
+                if req.rid == rid:
+                    return node, req
+        raise KeyError(f"request {rid} is not running on any node "
+                       "(pending/prefilling/finished requests don't migrate)")
+
+    def migrate(self, rid: int, dst_rank: int) -> MigrationReport:
+        """Live-migrate a running request's KV pages to ``dst_rank``.
+
+        Decode resumes on the destination with bitwise-identical tokens;
+        raises ``UnroutableError`` when the fault map separates the nodes,
+        and leaves the request untouched on the source when the
+        destination has no free slot/pages.
+        """
+        src_node, req = self._find_running(rid)
+        if dst_rank not in self.nodes:
+            raise KeyError(f"no serving node at rank {dst_rank}")
+        if dst_rank == src_node.rank:
+            raise ValueError(f"request {rid} already lives on {dst_rank}")
+        dst_node = self.nodes[dst_rank]
+        old_slot = req.slot
+        assert old_slot is not None
+        state = src_node.lm.export_slot(old_slot)
+        # route first: an unroutable fabric must fail before any state
+        # moves (the request keeps decoding on the source)
+        sched = fabric.lower_p2p(self.torus, src_node.rank, dst_rank,
+                                 faults=self.faults)
+        new_slot = dst_node.lm.import_slot(state)
+        # only the live pages ride the wire (headroom is claimed fresh on
+        # the destination) — the same byte count the bench gate prices
+        modelled = src_node.lm.endpoint.put_pages(
+            dst_rank, src_node.lm.allocator.region,
+            src_node.lm.live_pages(old_slot),
+            page_nbytes=self.page_nbytes,
+            dst_endpoint=dst_node.lm.endpoint,
+            dst_region=dst_node.lm.allocator.region,
+            dst_pages=dst_node.lm.slot_pages[new_slot][:state.n_pages],
+            schedule=sched)
+        src_node.engine.detach(old_slot)
+        src_node.lm.free_slot(old_slot)
+        req.slot = new_slot
+        dst_node.engine.attach(req)
+        report = MigrationReport(
+            rid=rid, src=src_node.rank, dst=dst_rank,
+            n_pages=state.n_pages, nbytes=state.nbytes,
+            hops=sched.max_hops,
+            min_hops=self.torus.hop_distance(src_node.rank, dst_rank),
+            modelled_s=modelled,
+            reprefill_s=reprefill_stall_s(self.n_params, req.pos))
+        self.migrations.append(report)
+        return report
+
+    def rebalance(self, threshold: int = 2) -> MigrationReport | None:
+        """Migrate one running request from the most- to the least-loaded
+        node when the load gap reaches ``threshold``; returns the report
+        (or None when balanced / nothing migratable)."""
+        busiest = max(self.nodes.values(), key=lambda n: (n.load, -n.rank))
+        idlest = min(self.nodes.values(), key=lambda n: (n.load, n.rank))
+        if busiest.rank == idlest.rank \
+                or busiest.load - idlest.load < threshold \
+                or not busiest.engine.running:
+            return None
+        # move the request with the most decode work left — it amortises
+        # the wire cost over the largest avoided future imbalance
+        req = max(busiest.engine.running.values(),
+                  key=lambda r: r.max_new_tokens - len(r.out_tokens))
+        try:
+            return self.migrate(req.rid, idlest.rank)
+        except fabric.UnroutableError:
+            raise   # a partitioned fabric is NOT "balanced" — surface it
+        except RuntimeError:
+            return None   # destination pool/slots full: stay put
+
+    # -- reporting --------------------------------------------------------------
+    def stats(self) -> dict:
+        per_node = {r: dict(n.engine.stats(), load=n.load)
+                    for r, n in self.nodes.items()}
+        return {
+            "nodes": per_node,
+            "n_migrations": len(self.migrations),
+            "migrated_bytes": sum(m.nbytes for m in self.migrations),
+            "migration_modelled_s": sum(m.modelled_s
+                                        for m in self.migrations),
+            "reprefill_avoided_s": sum(m.reprefill_s
+                                       for m in self.migrations),
+            "rerouted_migrations": sum(m.rerouted for m in self.migrations),
+            "faults": {"dead_nodes": sorted(self.faults.dead_nodes),
+                       "dead_links": sorted(self.faults.dead_links)},
+        }
+
+
+def owners(cluster: ServingCluster,
+           rids: Iterable[int]) -> dict[int, int | None]:
+    """rid -> rank map over running/prefilling/pending requests (test and
+    example helper; finished requests map to None)."""
+    out: dict[int, int | None] = {rid: None for rid in rids}
+    for node in cluster.nodes.values():
+        eng = node.engine
+        for req in (*eng.pending, *eng.prefilling.values(),
+                    *eng.running.values()):
+            if req.rid in out:
+                out[req.rid] = node.rank
+    return out

@@ -82,12 +82,48 @@ class PageAllocator:
         return self.endpoint.tlb.stats.hit_rate
 
 
+@dataclasses.dataclass
+class SlotState:
+    """A running slot's exportable KV state — what a migration moves.
+
+    ``k``/``v`` hold only the slot's LIVE pages (the ones covering
+    ``seq_len`` tokens) in page-table (logical) order, shaped
+    (L, n_pages, page_tokens, n_kv_heads, head_dim) — the zero/stale
+    ``max_new`` headroom pages never touch the wire; the importer claims
+    all ``n_alloc`` pages fresh from its own pool (physical page ids are
+    a node-local detail and do NOT travel).
+    """
+
+    k: jax.Array
+    v: jax.Array
+    seq_len: int
+    page_tokens: int
+    n_alloc: int                 # total pages the importer must claim
+    nbytes: int                  # wire payload (live page contents only)
+
+    @property
+    def n_pages(self) -> int:
+        """Live pages on the wire (<= n_alloc)."""
+        return int(self.k.shape[1])
+
+
 class PagedLM:
-    """Decode wrapper holding paged K/V pools for every layer."""
+    """Decode wrapper holding paged K/V pools for every layer.
+
+    ``torus``/``rank`` place this node's fabric twin at its real torus
+    coordinate (a serving cluster passes the shared cluster fabric);
+    ``tp_axes`` are the mesh axes of the modelled tensor-parallel
+    deployment — default: one axis per torus dimension; pass ``()`` for a
+    single-card replica whose fabric traffic is only inter-node
+    (migration) RDMA.
+    """
 
     def __init__(self, cfg: ArchCfg, params, *, max_batch: int,
                  max_seq: int, page_tokens: int = 16,
-                 pool_pages: int | None = None) -> None:
+                 pool_pages: int | None = None,
+                 torus: Torus | None = None,
+                 tp_axes: tuple[str, ...] | None = None,
+                 rank: int = 0, net: NetModel | None = None) -> None:
         assert cfg.family in ("dense", "moe", "vlm")
         self.cfg = cfg
         self.params = params
@@ -103,33 +139,55 @@ class PagedLM:
         self.v_pool = jnp.zeros_like(self.k_pool)
         self.page_table = np.zeros((max_batch, self.pages_per_seq), np.int32)
         self.seq_lens = np.zeros((max_batch,), np.int32)
-        self.torus = Torus((4, 4))
-        self.net = NetModel()
+        self.torus = torus or Torus((4, 4))
+        self.rank = rank
+        if not 0 <= rank < self.torus.size:
+            raise ValueError(f"rank {rank} out of range for torus "
+                             f"{self.torus.dims}")
+        self.net = net or NetModel()
+        self.bytes_per_token = 2 * L * cfg.n_kv_heads * hd * 2
+        self.endpoint = RdmaEndpoint(self.torus, rank=rank, net=self.net)
         self.allocator = PageAllocator(
             self.n_pages, page_tokens,
-            bytes_per_token=2 * L * cfg.n_kv_heads * hd * 2, endpoint=
-            RdmaEndpoint(self.torus, rank=0, net=self.net))
+            bytes_per_token=self.bytes_per_token, endpoint=self.endpoint)
         # Fabric twin of a TP deployment of this model on the torus: one
         # residual-stream all-reduce per layer per decode step, priced by
         # the same CollectiveSchedule the trainer executes.  Reported in
         # stats() against the measured decode step time.
-        self.tp_schedule = fabric.lower_all_reduce(self.torus, ("x", "y"))
-        ar_bytes = max_batch * cfg.d_model * jnp.dtype(cfg.dtype).itemsize
-        self.predicted_tp_comm_s = L * fabric.estimate(
-            self.tp_schedule, ar_bytes, self.net).total_s
+        if tp_axes is None:   # one TP axis per torus dim, whatever its rank
+            names = ("x", "y", "z")
+            tp_axes = tuple(names[i] if i < len(names) else f"d{i}"
+                            for i in range(self.torus.ndims))
+        self.tp_axes = tuple(tp_axes)
+        if self.tp_axes:
+            self.tp_schedule = fabric.lower_all_reduce(self.torus,
+                                                       self.tp_axes)
+            ar_bytes = max_batch * cfg.d_model * jnp.dtype(cfg.dtype).itemsize
+            self.predicted_tp_comm_s = L * fabric.estimate(
+                self.tp_schedule, ar_bytes, self.net).total_s
+        else:
+            self.tp_schedule = None
+            self.predicted_tp_comm_s = 0.0
         self.slot_pages: dict[int, list[int]] = {}
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
         self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
 
     # -- slot management --------------------------------------------------------
-    def claim_slot(self, prompt_len: int, max_new: int) -> int:
+    def _claim(self, npages: int) -> int:
+        """Claim a free slot holding ``npages`` freshly allocated pages."""
+        if npages > self.pages_per_seq:
+            # ValueError, NOT RuntimeError: admission retries RuntimeError
+            # (transient exhaustion), but an oversize request can never
+            # fit and must fail loudly instead of re-queueing forever
+            raise ValueError(
+                f"request needs {npages} pages > pages_per_seq "
+                f"{self.pages_per_seq} (raise max_seq or shorten it)")
         used = set(self.slot_pages)
         slot = next((i for i in range(self.max_batch) if i not in used),
                     None)
         if slot is None:
             raise RuntimeError("no free decode slot")
-        npages = -(-(prompt_len + max_new) // self.page)
         pages: list[int] = []
         try:
             for _ in range(npages):
@@ -145,9 +203,52 @@ class PagedLM:
         self.seq_lens[slot] = 0
         return slot
 
+    def claim_slot(self, prompt_len: int, max_new: int) -> int:
+        return self._claim(-(-(prompt_len + max_new) // self.page))
+
     def free_slot(self, slot: int) -> None:
         self.allocator.release(self.slot_pages.pop(slot))
         self.seq_lens[slot] = 0
+
+    # -- slot migration (export/import) -----------------------------------------
+    def live_pages(self, slot: int) -> list[int]:
+        """The slot's pages actually covering its ``seq_len`` tokens — the
+        only ones a migration must move (headroom pages hold no state the
+        decode can ever read: positions past seq_len are masked)."""
+        seq_len = int(self.seq_lens[slot])
+        n_live = min(len(self.slot_pages[slot]), -(-seq_len // self.page))
+        return self.slot_pages[slot][:n_live]
+
+    def export_slot(self, slot: int) -> SlotState:
+        """Snapshot a slot's live KV pages (logical order) + seq_len."""
+        live = np.asarray(self.live_pages(slot), np.int32)
+        return SlotState(
+            k=self.k_pool[:, live], v=self.v_pool[:, live],
+            seq_len=int(self.seq_lens[slot]), page_tokens=self.page,
+            n_alloc=len(self.slot_pages[slot]),
+            nbytes=len(live) * self.page * self.bytes_per_token)
+
+    def import_slot(self, state: SlotState) -> int:
+        """Land a migrated slot: claim ``n_alloc`` local pages, write the
+        live KV contents, restore the sequence length.  Decode resumes
+        bitwise-identically — the live page contents and seq_len are the
+        whole decode state (headroom content is never read before being
+        written)."""
+        if state.page_tokens != self.page:
+            raise ValueError(
+                f"page_tokens mismatch: exported {state.page_tokens}, "
+                f"local {self.page}")
+        if state.n_pages > state.n_alloc:
+            raise ValueError(f"corrupt slot state: {state.n_pages} live "
+                             f"pages > {state.n_alloc} allocated")
+        slot = self._claim(state.n_alloc)
+        if state.n_pages:
+            live = jnp.asarray(self.slot_pages[slot][:state.n_pages],
+                               jnp.int32)
+            self.k_pool = self.k_pool.at[:, live].set(state.k)
+            self.v_pool = self.v_pool.at[:, live].set(state.v)
+        self.seq_lens[slot] = state.seq_len
+        return slot
 
     # -- jitted compute ----------------------------------------------------------
     def _prefill_impl(self, params, tokens, k_pool, v_pool, page_table,
@@ -159,7 +260,8 @@ class PagedLM:
         cfg = self.cfg
         _, cache, h = transformer.prefill(cfg, params, {"tokens": tokens},
                                           max_len=tokens.shape[1],
-                                          remat=False, return_hidden=True)
+                                          remat=False, return_hidden=True,
+                                          moe_dropless=True)
         S = tokens.shape[1]
         last_h = jax.lax.dynamic_slice_in_dim(h, true_len - 1, 1, axis=1)
         logits = common.lm_head(cfg, params["embed"], last_h)
@@ -237,7 +339,7 @@ class PagedLM:
             h = h + a
             x2 = common.apply_norm(cfg, lp["ln2"], h)
             if cfg.moe is not None:
-                m, _ = moe_mod.apply_moe(cfg, lp["moe"], x2)
+                m, _ = moe_mod.apply_moe(cfg, lp["moe"], x2, dropless=True)
             else:
                 m = common.apply_mlp(cfg, lp["mlp"], x2)
             return h + m, (kp, vp)
@@ -283,7 +385,7 @@ class PagedLM:
             h = h + a
             x2 = common.apply_norm(cfg, lp["ln2"], h)
             if cfg.moe is not None:
-                m, _ = moe_mod.apply_moe(cfg, lp["moe"], x2)
+                m, _ = moe_mod.apply_moe(cfg, lp["moe"], x2, dropless=True)
             else:
                 m = common.apply_mlp(cfg, lp["mlp"], x2)
             return h + m, (kp, vp)
@@ -365,10 +467,29 @@ class Engine:
         self.decode_stall_s = 0.0   # non-decode work while a batch waited
         self._step_times: list[float] = []
 
+    @property
+    def load(self) -> int:
+        """Requests this engine is responsible for (the router's metric)."""
+        return len(self.pending) + len(self.prefilling) + len(self.running)
+
     def submit(self, req: Request) -> None:
         self.pending.append(req)
 
-    def _admit(self) -> None:
+    # -- migration hooks (ServingCluster) ---------------------------------------
+    def detach(self, slot: int) -> Request:
+        """Hand a running request over to a migration (its pages stay
+        claimed until the cluster frees them after the PUT)."""
+        return self.running.pop(slot)
+
+    def attach(self, req: Request) -> None:
+        """Adopt a migrated request whose slot was already imported."""
+        if req.slot is None or req.slot in self.running:
+            raise ValueError(f"cannot attach request {req.rid} at slot "
+                             f"{req.slot}")
+        self.running[req.slot] = req
+
+    def _admit(self) -> int:
+        admitted = 0
         while self.pending and len(self.running) + len(self.prefilling) \
                 < self.lm.max_batch:
             req = self.pending.pop(0)
@@ -377,8 +498,14 @@ class Engine:
                                           req.max_new_tokens)
             except (RuntimeError, StopIteration):
                 self.pending.insert(0, req)
-                return
+                return admitted
+            except ValueError:
+                # oversize request: surface the error, but keep the request
+                # addressable (it must not vanish from every queue)
+                self.pending.insert(0, req)
+                raise
             req.slot = slot
+            admitted += 1
             if self.chunked_prefill:
                 req.pos = 0
                 self.prefilling[slot] = req
@@ -387,30 +514,36 @@ class Engine:
                 req.out_tokens.append(first)
                 req.pos = len(req.prompt)
                 self.running[slot] = req
+        return admitted
 
-    def _advance_prefills(self) -> None:
+    def _advance_prefills(self) -> int:
         """One page-sized chunk per prefilling request per engine step."""
+        chunks = 0
         for slot, req in list(self.prefilling.items()):
             tok = self.lm.prefill_slot_chunk(slot, req.prompt, req.pos,
                                              self.chunk_tokens)
             self.prefill_chunks += 1
+            chunks += 1
             req.pos = min(req.pos + self.chunk_tokens, len(req.prompt))
             if tok is not None:
                 req.out_tokens.append(tok)
                 req.pos = len(req.prompt)
                 del self.prefilling[slot]
                 self.running[slot] = req
+        return chunks
 
     def step(self) -> None:
         t0 = time.perf_counter()
         had_batch = bool(self.running)
-        self._admit()
+        worked = self._admit()
         if self.chunked_prefill:
-            self._advance_prefills()
-        if had_batch:
+            worked += self._advance_prefills()
+        if had_batch and worked:
             # whole-prompt prefill (or the per-step chunk) ran while the
             # decode batch sat idle: that gap is the admission stall the
-            # chunked path bounds at one chunk
+            # chunked path bounds at one chunk.  Steps that admitted or
+            # prefilled nothing did no non-decode work — the _admit walk
+            # itself is not a stall.
             self.decode_stall_s += time.perf_counter() - t0
         if not self.running:
             return

@@ -1,0 +1,37 @@
+"""Shared test fixtures: deterministic seeding + hypothesis budgets.
+
+Every test that wants randomness takes the ``rng`` fixture — a NumPy
+generator seeded from the test's own nodeid, so a test's stream is stable
+across runs and re-orderings but distinct between tests (no cross-test
+coupling through a shared global seed).
+
+Hypothesis (optional dep) gets two profiles: ``dev`` (default, the
+library's standard budget) and ``ci`` — a small example budget the fast
+CI lane selects via ``HYPOTHESIS_PROFILE=ci`` (scripts/ci.sh) so property
+suites stay quick on every PR; the full lane and local runs keep the
+larger budget.  Deadlines are disabled in both: model-backed properties
+jit-compile on first example.
+"""
+from __future__ import annotations
+
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.register_profile("dev", max_examples=100, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ImportError:      # property suites importorskip hypothesis anyway
+    pass
+
+
+@pytest.fixture
+def rng(request) -> np.random.Generator:
+    """Per-test deterministic RNG (seed = hash of the test's nodeid)."""
+    seed = zlib.adler32(request.node.nodeid.encode()) & 0xFFFFFFFF
+    return np.random.default_rng(seed)

@@ -1,0 +1,174 @@
+"""Property-based invariants for the paging stack (PageAllocator, the
+PagedLM claim/free machine, and the registration Tlb).
+
+The PR-2 ``claim_slot`` partial-page-leak regression is generalised here:
+instead of one hand-written exhaustion case, hypothesis drives random
+claim/free/exhaust sequences and checks after EVERY operation that
+
+  * no physical page is ever allocated twice,
+  * the pool is conserved (free + claimed == total, leak-free), and
+  * a failed claim (pool/slot exhaustion) leaves the allocator exactly as
+    it found it.
+
+The Tlb properties pin the §2.2 semantics: translation is always correct
+w.r.t. the page walk, occupancy never exceeds capacity, and an
+invalidated page ALWAYS re-walks on its next touch (the shootdown can
+never leave a stale fast-path entry).
+"""
+import numpy as np
+import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.core.rdma import RdmaEndpoint
+from repro.core.tlb import PAGE_BYTES, T_HW_HIT, T_NIOS_WALK, Tlb
+from repro.core.topology import Torus
+from repro.serving.engine import PageAllocator, PagedLM
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator: random alloc/free interleavings
+# ---------------------------------------------------------------------------
+
+N_POOL = 12
+
+_alloc_ops = st.lists(
+    st.one_of(st.just(("alloc",)),
+              st.tuples(st.just("free"), st.integers(0, 63))),
+    max_size=120)
+
+
+@hp.given(_alloc_ops)
+def test_allocator_never_double_allocates_and_conserves_pool(ops):
+    alloc = PageAllocator(N_POOL, page_tokens=4, bytes_per_token=64,
+                          endpoint=RdmaEndpoint(Torus((2, 2)), 0))
+    held: list[int] = []
+    for op in ops:
+        if op[0] == "alloc":
+            if alloc.free:
+                page = alloc.alloc()
+                assert page not in held          # never handed out twice
+                held.append(page)
+            else:
+                with pytest.raises(RuntimeError):
+                    alloc.alloc()
+        else:
+            if held:
+                alloc.release([held.pop(op[1] % len(held))])
+        # conservation after every step: free + held partition the pool
+        assert sorted(alloc.free + held) == list(range(N_POOL))
+
+
+# ---------------------------------------------------------------------------
+# PagedLM claim/free machine (multi-page claims, exhaustion mid-claim)
+# ---------------------------------------------------------------------------
+
+def _tiny_lm() -> PagedLM:
+    from repro import configs
+
+    cfg = configs.get_reduced("smollm-135m")
+    # params=None: only the slot bookkeeping runs, never the jitted compute
+    return PagedLM(cfg, None, max_batch=3, max_seq=24, page_tokens=4,
+                   pool_pages=8, tp_axes=(), torus=Torus((2, 2)))
+
+
+_claim_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("claim"), st.integers(1, 30), st.integers(1, 20)),
+        st.tuples(st.just("free"), st.integers(0, 63))),
+    max_size=40)
+
+
+@pytest.mark.slow
+@hp.given(_claim_ops)
+def test_claim_slot_partial_exhaustion_never_leaks(ops):
+    """The PR-2 leak regression as a generated invariant: whatever the
+    claim/free/exhaust interleaving, a failed multi-page claim returns its
+    partial allocation and the pool stays conserved."""
+    lm = _tiny_lm()
+    n_pages = lm.n_pages
+    for op in ops:
+        if op[0] == "claim":
+            free_before = sorted(lm.allocator.free)
+            slots_before = dict(lm.slot_pages)
+            try:
+                slot = lm.claim_slot(prompt_len=op[1], max_new=op[2])
+            except (RuntimeError, ValueError):
+                # any failed claim — retryable exhaustion (RuntimeError:
+                # pages or slots) or an oversize request (ValueError:
+                # > pages_per_seq) — must be side-effect free
+                assert sorted(lm.allocator.free) == free_before
+                assert lm.slot_pages == slots_before
+            else:
+                assert slot not in slots_before
+        else:
+            if lm.slot_pages:
+                slots = sorted(lm.slot_pages)
+                lm.free_slot(slots[op[1] % len(slots)])
+        claimed = [p for pages in lm.slot_pages.values() for p in pages]
+        assert len(set(claimed)) == len(claimed)     # no double allocation
+        assert sorted(lm.allocator.free + claimed) == list(range(n_pages))
+        for slot, pages in lm.slot_pages.items():
+            assert list(lm.page_table[slot, :len(pages)]) == pages
+
+
+# ---------------------------------------------------------------------------
+# Tlb: correctness, capacity, and invalidate-then-translate re-walk
+# ---------------------------------------------------------------------------
+
+_tlb_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("translate"), st.integers(0, 31)),
+        st.tuples(st.just("invalidate"), st.integers(0, 31)),
+        st.just(("shootdown",))),
+    max_size=150)
+
+
+@hp.given(_tlb_ops)
+def test_tlb_invalidate_then_translate_always_rewalks(ops):
+    t = Tlb(entries=16, ways=4, walk=lambda v: v + 1000)
+    walked = 0
+    must_walk: set[int] = set(range(32))   # cold pages walk on first touch
+    for op in ops:
+        if op[0] == "translate":
+            v = op[1]
+            paddr, cost = t.translate(v * PAGE_BYTES + 5)
+            assert paddr == (v + 1000) * PAGE_BYTES + 5   # always correct
+            if v in must_walk:
+                # invalidated (or never-seen) page: MUST take the Nios II
+                # walk — a hit here would be a stale fast-path entry
+                assert cost == pytest.approx(T_NIOS_WALK + T_HW_HIT)
+                must_walk.discard(v)
+            else:
+                assert cost in (pytest.approx(T_HW_HIT),
+                                pytest.approx(T_NIOS_WALK + T_HW_HIT))
+            if cost > T_HW_HIT * 1.5:
+                walked += 1
+        elif op[0] == "invalidate":
+            t.invalidate(op[1] * PAGE_BYTES)
+            must_walk.add(op[1])
+        else:
+            t.invalidate()
+            must_walk = set(range(32))
+        assert sum(len(s) for s in t._sets) <= 16      # capacity respected
+    assert t.stats.misses == walked
+    assert t.stats.accesses == t.stats.hits + t.stats.misses
+
+
+@hp.given(st.lists(st.integers(0, 200), min_size=1, max_size=200))
+def test_allocator_translation_cost_monotone(vpages):
+    """Allocator translation accounting only ever grows, and hit_rate
+    mirrors the endpoint TLB stats."""
+    ep = RdmaEndpoint(Torus((2, 2)), 0, tlb_entries=16)
+    alloc = PageAllocator(32, page_tokens=4, bytes_per_token=64, endpoint=ep)
+    last = alloc.translation_cost
+    took = []
+    for _ in vpages:
+        if not alloc.free:
+            break
+        took.append(alloc.alloc())
+        assert alloc.translation_cost >= last
+        last = alloc.translation_cost
+    assert alloc.hit_rate == ep.tlb.stats.hit_rate
+    assert np.isfinite(alloc.translation_cost)

@@ -214,9 +214,14 @@ def test_claim_slot_releases_partial_pages_on_exhaustion():
                  pool_pages=3)
     free_before = len(lm.allocator.free)
     with pytest.raises(RuntimeError):
-        lm.claim_slot(prompt_len=30, max_new=10)   # needs 5 of 3 pages
+        lm.claim_slot(prompt_len=22, max_new=10)   # needs 4 of 3 pages
     assert len(lm.allocator.free) == free_before
     assert not lm.slot_pages
+    # an outright oversize request (> pages_per_seq) is a ValueError, not
+    # the retryable exhaustion RuntimeError — admission must not re-queue it
+    with pytest.raises(ValueError):
+        lm.claim_slot(prompt_len=30, max_new=10)   # needs 5 > 4 pages/seq
+    assert len(lm.allocator.free) == free_before
     # and the slot is still claimable once the request fits
     slot = lm.claim_slot(prompt_len=10, max_new=6)
     assert len(lm.slot_pages[slot]) == 2

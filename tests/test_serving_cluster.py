@@ -1,0 +1,277 @@
+"""Serving-cluster behaviour: router placement, live KV-page migration
+(bitwise decode equivalence, incl. under a link-fault reroute), and the
+chunked-vs-whole-prompt prefill differential across model families.
+
+The migration acceptance bar: a decode sequence with a mid-stream slot
+migration produces EXACTLY the tokens of the unmigrated run — the KV
+pages + seq_len are the complete decode state, so nothing else may leak
+into the numerics.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro import configs
+from repro.core import fabric
+from repro.core.topology import Torus
+from repro.models import api
+from repro.serving.cluster import ServingCluster, owners
+from repro.serving.engine import Engine, PagedLM, Request
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = configs.get_reduced("smollm-135m")
+    return cfg, api.get_model(cfg).init(jax.random.key(0))
+
+
+def _cluster(cfg, params, **kw):
+    kw.setdefault("torus", Torus((4,)))
+    kw.setdefault("node_ranks", (0, 1))
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("page_tokens", 8)
+    return ServingCluster(cfg, params, **kw)
+
+
+def _decode_alone(cfg, params, prompt, max_new):
+    lm = PagedLM(cfg, params, max_batch=2, max_seq=64, page_tokens=8)
+    eng = Engine(lm)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=max_new))
+    eng.run_to_completion()
+    return eng.finished[0].out_tokens
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+
+def test_router_places_least_loaded(dense_model, rng):
+    cfg, params = dense_model
+    cl = _cluster(cfg, params)
+    rids = list(range(4))
+    for rid in rids:
+        prompt = rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+        cl.submit(Request(rid=rid, prompt=prompt, max_new_tokens=3))
+    where = owners(cl, rids)
+    # alternating placement: every other request lands on the other node
+    assert [where[r] for r in rids] == [0, 1, 0, 1]
+    assert {n.load for n in cl.nodes.values()} == {2}
+    cl.run_to_completion()
+    assert [r.rid for r in cl.finished] == rids
+    assert cl.in_flight == 0
+
+
+# ---------------------------------------------------------------------------
+# live migration: bitwise decode equivalence
+# ---------------------------------------------------------------------------
+
+def test_migration_mid_decode_bitwise_identical(dense_model, rng):
+    cfg, params = dense_model
+    prompt = rng.integers(0, cfg.vocab, size=(9,)).astype(np.int32)
+    baseline = _decode_alone(cfg, params, prompt, max_new=8)
+
+    cl = _cluster(cfg, params)
+    assert cl.submit(Request(rid=7, prompt=prompt, max_new_tokens=8)) == 0
+    for _ in range(4):                     # prefill + a few decode steps
+        cl.step()
+    mid = len(next(iter(cl.nodes[0].engine.running.values())).out_tokens)
+    assert 0 < mid < 8                     # genuinely mid-stream
+    rep = cl.migrate(7, 1)
+    assert rep.src == 0 and rep.dst == 1 and not rep.rerouted
+    assert rep.n_pages > 0 and rep.nbytes == rep.n_pages * 8 * \
+        cl.nodes[0].lm.bytes_per_token
+    assert not cl.nodes[0].engine.running  # source really let go
+    assert not cl.nodes[0].lm.slot_pages   # and freed its pages
+    cl.run_to_completion()
+    assert cl.finished[0].out_tokens == baseline
+    st = cl.stats()
+    assert st["n_migrations"] == 1 and st["migrated_bytes"] == rep.nbytes
+
+
+def test_migration_through_link_fault_reroute(dense_model, rng):
+    cfg, params = dense_model
+    prompt = rng.integers(0, cfg.vocab, size=(11,)).astype(np.int32)
+    baseline = _decode_alone(cfg, params, prompt, max_new=7)
+
+    cl = _cluster(cfg, params)
+    cl.fail_link(0, 1)                     # the only direct link on a ring
+    cl.submit(Request(rid=0, prompt=prompt, max_new_tokens=7))
+    for _ in range(3):
+        cl.step()
+    rep = cl.migrate(0, 1)
+    assert rep.rerouted and rep.hops == 3 and rep.min_hops == 1
+    cl.run_to_completion()
+    assert cl.finished[0].out_tokens == baseline
+    assert cl.stats()["rerouted_migrations"] == 1
+
+
+def test_migration_unroutable_when_fabric_partitioned(dense_model, rng):
+    cfg, params = dense_model
+    cl = ServingCluster(cfg, params, torus=Torus((2,)), node_ranks=(0, 1),
+                        max_batch=2, max_seq=64, page_tokens=8)
+    cl.fail_link(0, 1)                     # a 2-ring has a single link
+    prompt = rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32)
+    cl.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+    for _ in range(2):
+        cl.step()
+    with pytest.raises(fabric.UnroutableError):
+        cl.migrate(0, 1)
+    # rebalance must surface the partition too, not report "balanced"
+    with pytest.raises(fabric.UnroutableError):
+        cl.rebalance(threshold=1)
+    # the request never left the source and still completes
+    assert owners(cl, [0])[0] == 0
+    cl.run_to_completion()
+    assert len(cl.finished) == 1
+
+
+def test_migration_rejected_when_destination_full(dense_model, rng):
+    cfg, params = dense_model
+    cl = _cluster(cfg, params, max_batch=1)
+    p0 = rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+    p1 = rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+    cl.submit(Request(rid=0, prompt=p0, max_new_tokens=6))
+    cl.submit(Request(rid=1, prompt=p1, max_new_tokens=6))
+    cl.step()
+    with pytest.raises(RuntimeError):      # dst has no free decode slot
+        cl.migrate(0, 1)
+    assert owners(cl, [0, 1]) == {0: 0, 1: 1}
+    cl.run_to_completion()
+    assert len(cl.finished) == 2
+
+
+def test_rebalance_moves_work_off_the_busiest_node(dense_model, rng):
+    cfg, params = dense_model
+    cl = _cluster(cfg, params, max_batch=3)
+    # bypass the router to manufacture imbalance: all load on node 0
+    for rid in range(3):
+        prompt = rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+        cl.nodes[0].engine.submit(
+            Request(rid=rid, prompt=prompt, max_new_tokens=6))
+    for _ in range(2):
+        cl.step()
+    assert cl.rebalance(threshold=2) is not None
+    loads = {r: n.load for r, n in cl.nodes.items()}
+    assert loads == {0: 2, 1: 1}
+    assert cl.rebalance(threshold=2) is None     # now balanced
+    cl.run_to_completion()
+    assert len(cl.finished) == 3
+
+
+def test_export_import_slot_roundtrip_without_decode():
+    """Slot state machinery alone (params never touched): page contents,
+    page-table row and seq_len survive an export/import across nodes."""
+    cfg = configs.get_reduced("smollm-135m")
+    t = Torus((2,))
+    a = PagedLM(cfg, None, max_batch=2, max_seq=32, page_tokens=4,
+                torus=t, tp_axes=(), rank=0)
+    b = PagedLM(cfg, None, max_batch=2, max_seq=32, page_tokens=4,
+                torus=t, tp_axes=(), rank=1)
+    slot = a.claim_slot(prompt_len=6, max_new=4)   # 3 pages of 4 tokens
+    pages = a.slot_pages[slot]
+    marker = np.arange(a.k_pool[:, pages].size,
+                       dtype=np.float32).reshape(a.k_pool[:, pages].shape)
+    a.k_pool = a.k_pool.at[:, np.asarray(pages)].set(marker.astype(
+        a.k_pool.dtype))
+    a.seq_lens[slot] = 6
+    state = a.export_slot(slot)
+    # only the 2 live pages (ceil(6/4)) travel; headroom is claimed fresh
+    assert state.n_pages == 2 and state.n_alloc == len(pages) == 3
+    assert state.seq_len == 6
+    assert state.nbytes == 2 * 4 * a.bytes_per_token
+    new = b.import_slot(state)
+    assert len(b.slot_pages[new]) == 3
+    live = b.slot_pages[new][:2]
+    np.testing.assert_array_equal(
+        np.asarray(b.k_pool[:, np.asarray(live)]),
+        np.asarray(a.k_pool[:, np.asarray(pages[:2])]))
+    assert int(b.seq_lens[new]) == 6
+    assert list(b.page_table[new, :3]) == b.slot_pages[new]
+    with pytest.raises(ValueError):        # page geometry must match
+        PagedLM(cfg, None, max_batch=1, max_seq=32, page_tokens=8,
+                torus=t, tp_axes=()).import_slot(state)
+
+
+# ---------------------------------------------------------------------------
+# chunked vs whole-prompt prefill differential (dense + moe families)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["smollm-135m", "olmoe-1b-7b"])
+def test_chunked_prefill_differential_random_shapes(arch, rng):
+    """Chunk-interleaved admission must be a pure scheduling change for
+    ANY prompt length / chunk size: tokens identical to whole-prompt
+    prefill, on the dense and the moe family alike."""
+    cfg = configs.get_reduced(arch)
+    params = api.get_model(cfg).init(jax.random.key(2))
+    cases = [(int(rng.integers(3, 29)), int(rng.integers(1, 4)))
+             for _ in range(3)]
+
+    for plen, chunk_pages in cases:
+        prompts = [rng.integers(0, cfg.vocab, size=(plen,)).astype(np.int32),
+                   rng.integers(0, cfg.vocab, size=(max(1, plen - 2),)
+                                ).astype(np.int32)]
+
+        def run(chunked):
+            lm = PagedLM(cfg, params, max_batch=2, max_seq=48, page_tokens=8)
+            eng = Engine(lm, chunked_prefill=chunked,
+                         prefill_chunk_pages=chunk_pages)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+            eng.run_to_completion()
+            assert len(eng.finished) == len(prompts)
+            return {r.rid: r.out_tokens for r in eng.finished}
+
+        assert run(False) == run(True), \
+            f"{arch}: plen={plen} chunk_pages={chunk_pages}"
+
+
+def test_oversize_request_fails_loudly_not_livelocks(dense_model, rng):
+    """A request that can never fit (needs more pages than pages_per_seq)
+    must raise at admission, not re-queue forever as 'transient'."""
+    cfg, params = dense_model
+    lm = PagedLM(cfg, params, max_batch=2, max_seq=16, page_tokens=8)
+    eng = Engine(lm)
+    prompt = rng.integers(0, cfg.vocab, size=(30,)).astype(np.int32)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=10))
+    with pytest.raises(ValueError, match="pages_per_seq"):
+        eng.step()
+    # the rejected request must not vanish from every queue
+    assert [r.rid for r in eng.pending] == [0]
+
+
+def test_pagedlm_accepts_any_torus_rank_dims():
+    """The torus/rank placement params must work for any fabric shape —
+    the TP-twin axes default to one per torus dim."""
+    cfg = configs.get_reduced("smollm-135m")
+    for dims in ((4,), (2, 2), (2, 2, 2)):
+        t = Torus(dims)
+        lm = PagedLM(cfg, None, max_batch=1, max_seq=16, page_tokens=8,
+                     torus=t, rank=t.size - 1)
+        assert len(lm.tp_axes) == t.ndims
+        assert lm.predicted_tp_comm_s >= 0.0
+    with pytest.raises(ValueError):
+        PagedLM(cfg, None, max_batch=1, max_seq=16, torus=Torus((2,)),
+                rank=5)
+
+
+def test_stall_accounting_only_counts_real_work(dense_model, rng):
+    """A step that neither admitted nor prefilled must not accrue
+    decode_stall_s (the _admit walk is not a stall)."""
+    cfg, params = dense_model
+    lm = PagedLM(cfg, params, max_batch=2, max_seq=64, page_tokens=8)
+    eng = Engine(lm)
+    prompt = rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+    eng.step()                             # admits + prefills: counted
+    stall_after_admit = eng.decode_stall_s
+    assert stall_after_admit == 0.0        # no batch was waiting yet
+    for _ in range(3):                     # pure decode steps: not counted
+        eng.step()
+    assert eng.decode_stall_s == stall_after_admit
+    # a second request admitted while the first decodes IS a stall
+    eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=4))
+    eng.step()
+    assert eng.decode_stall_s > stall_after_admit
