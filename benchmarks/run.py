@@ -2,6 +2,8 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all benches, CSV
   PYTHONPATH=src python -m benchmarks.run latency    # one bench
+  PYTHONPATH=src python -m benchmarks.run --only contention   # same, for
+                                                     # fast local iteration
 
 Each module exposes ``run() -> [rows]`` and ``check(rows) -> [errors]``;
 check() validates the paper's quantitative claims against our model and the
@@ -26,8 +28,8 @@ import sys
 import time
 
 MODULES = ["apelink_eff", "dma_overlap", "tlb", "latency", "bandwidth",
-           "fabric_cost", "overlap", "migration", "lofamo", "nextgen",
-           "roofline"]
+           "fabric_cost", "overlap", "migration", "contention", "lofamo",
+           "nextgen", "roofline"]
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -81,8 +83,27 @@ def write_snapshot(names, rows, timings, errors) -> str | None:
 
 
 def main(argv=None) -> int:
-    argv = sys.argv[1:] if argv is None else argv
-    names = argv or MODULES
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--only" in argv:
+        # --only <module>: run exactly one module (fast local iteration);
+        # equivalent to the positional form but self-documenting in CI logs
+        i = argv.index("--only")
+        if i + 1 >= len(argv):
+            print("--only requires a module name", file=sys.stderr)
+            return 2
+        names = [argv[i + 1]]
+        extra = argv[:i] + argv[i + 2:]
+        if extra:
+            print(f"--only is exclusive; unexpected args {extra}",
+                  file=sys.stderr)
+            return 2
+    else:
+        names = argv or MODULES
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        print(f"unknown bench module(s) {unknown}; known: {MODULES}",
+              file=sys.stderr)
+        return 2
     all_rows, all_errs = [], []
     timings: dict[str, float] = {}
     for name in names:

@@ -44,7 +44,8 @@ else
     echo "[ci] tier-1 tests (fast lane: -m 'not slow', small hypothesis budget)"
     HYPOTHESIS_PROFILE=ci python -m pytest -x -q -m "not slow"
     echo "[ci] benchmarks (quick set)"
-    python -m benchmarks.run overlap dma_overlap fabric_cost migration
+    python -m benchmarks.run overlap dma_overlap fabric_cost migration \
+        contention
 fi
 
 echo "[ci] bench regression gate"

@@ -71,43 +71,72 @@ def encode_packet(payload: np.ndarray, dest: int = 0) -> np.ndarray:
                            np.array(footer, np.uint32)])
 
 
-def decode_stream(stream: np.ndarray) -> list[tuple[int, np.ndarray]]:
+def _parse_packet(stream: np.ndarray, i: int) -> tuple[int, np.ndarray, int]:
+    """Parse one packet at word ``i``; returns (dest, payload, next_index).
+    Raises ValueError on any framing/checksum violation."""
+    n = stream.size
+    if stream[i] != MAGIC or i + 1 >= n:
+        raise ValueError(f"bad SOP framing at word {i}")
+    dest, length = unpack_header(stream[i + 1])
+    i += 2
+    payload = np.empty(length, np.uint32)
+    k = 0
+    while k < length:
+        if i >= n:
+            raise ValueError("truncated payload")
+        w = stream[i]
+        if w == MAGIC:
+            if i + 1 < n and stream[i + 1] == MAGIC:  # escaped literal
+                payload[k] = MAGIC
+                i += 2
+                k += 1
+                continue
+            raise ValueError(f"unexpected control sequence at word {i}")
+        payload[k] = w
+        i += 1
+        k += 1
+    if i + 2 > n or stream[i] != MAGIC:
+        raise ValueError(f"bad EOP framing at word {i}")
+    if stream[i + 1] != _crc(payload):
+        raise ValueError("checksum mismatch")
+    return dest, payload, i + 2
+
+
+def decode_stream(stream: np.ndarray, *,
+                  resync: bool = False) -> list[tuple[int, np.ndarray]]:
     """Inverse of a concatenation of ``encode_packet`` outputs.
 
     Returns [(dest, payload), ...].  Raises ValueError on malformed input
     (bad framing or checksum) — the hardware would drop the packet and raise
     a LO|FA|MO transmission-error flag instead.
+
+    ``resync=True`` models that hardware behaviour: a packet that fails to
+    parse is dropped and the receiver slides forward to the next MAGIC
+    candidate, re-locking on the first word sequence that parses as a
+    whole packet (framing AND checksum).  This is exactly what the word
+    stuffing exists for (§2.3): because a literal MAGIC can only ever
+    appear doubled inside a payload, packet boundaries stay recoverable
+    after mid-stream corruption — every intact packet beyond the damage
+    is returned.
     """
     stream = np.asarray(stream, dtype=np.uint32).ravel()
     out: list[tuple[int, np.ndarray]] = []
     i = 0
     n = stream.size
     while i < n:
-        if stream[i] != MAGIC or i + 1 >= n:
-            raise ValueError(f"bad SOP framing at word {i}")
-        dest, length = unpack_header(stream[i + 1])
-        i += 2
-        payload = np.empty(length, np.uint32)
-        k = 0
-        while k < length:
-            if i >= n:
-                raise ValueError("truncated payload")
-            w = stream[i]
-            if w == MAGIC:
-                if i + 1 < n and stream[i + 1] == MAGIC:  # escaped literal
-                    payload[k] = MAGIC
-                    i += 2
-                    k += 1
-                    continue
-                raise ValueError(f"unexpected control sequence at word {i}")
-            payload[k] = w
-            i += 1
-            k += 1
-        if i + 2 > n or stream[i] != MAGIC:
-            raise ValueError(f"bad EOP framing at word {i}")
-        if stream[i + 1] != _crc(payload):
-            raise ValueError("checksum mismatch")
-        i += 2
+        try:
+            dest, payload, i = _parse_packet(stream, i)
+        except ValueError:
+            if not resync:
+                raise
+            # drop and re-lock: next MAGIC strictly past the failed sync
+            nxt = i + 1
+            while nxt < n and stream[nxt] != MAGIC:
+                nxt += 1
+            if nxt >= n:
+                break
+            i = nxt
+            continue
         out.append((dest, payload))
     return out
 

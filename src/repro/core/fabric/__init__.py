@@ -1,17 +1,22 @@
 """``repro.core.fabric`` — the collective fabric layer.
 
-One IR, three consumers:
+One IR, four consumers:
 
     lower(collective, Torus, axes)  ->  CollectiveSchedule
         execute.*   the shard_map/ppermute program (fused dual-DMA rounds)
-        cost.*      predicted completion time (apelink.NetModel pricing)
+        cost.*      predicted completion time (apelink.NetModel pricing;
+                    ``backend="analytic"`` closed-form or ``"sim"``)
         fault.*     schedule rewritten around a LO|FA|MO fault map
+        sim.*       event-driven link-level timeline (``FabricSim``):
+                    per-link-direction FIFOs + credit flow control; the
+                    shared clock RDMA endpoints and the serving cluster
+                    inject concurrent flows into, so traffic CONTENDS
 
 ``core.collectives`` wraps the executor behind the familiar per-shard
 collective API; everything else (trainer, serving engine, benchmarks)
 consumes schedules directly.
 """
-from repro.core.fabric.cost import (CostEstimate, OverlapEstimate,
+from repro.core.fabric.cost import (BACKENDS, CostEstimate, OverlapEstimate,
                                     algorithmic_bandwidth, estimate,
                                     estimate_overlapped, message_time)
 from repro.core.fabric.execute import (execute, execute_all_gather,
@@ -26,22 +31,27 @@ from repro.core.fabric.lower import (axis_fault_penalty, live_ring, lower,
                                      lower_all_gather, lower_all_reduce,
                                      lower_all_to_all, lower_halo_exchange,
                                      lower_p2p, lower_reduce_scatter,
-                                     plan_buckets)
+                                     lower_route, plan_buckets)
 from repro.core.fabric.schedule import (A2A, AG, AR, HALO, P2P, RS, Bucket,
                                         BucketPlan, CollectiveSchedule,
                                         FaultMap, Phase, Step, Transfer)
+from repro.core.fabric.sim import (FabricSim, FlowResult, best_route,
+                                   candidate_routes, inject_schedule,
+                                   simulate_schedule)
 
 __all__ = [
     "A2A", "AG", "AR", "HALO", "P2P", "RS",
     "Bucket", "BucketPlan", "CollectiveSchedule", "FaultMap", "Phase",
     "Step", "Transfer",
-    "CostEstimate", "OverlapEstimate", "algorithmic_bandwidth", "estimate",
-    "estimate_overlapped", "message_time",
+    "BACKENDS", "CostEstimate", "OverlapEstimate", "algorithmic_bandwidth",
+    "estimate", "estimate_overlapped", "message_time",
     "execute", "execute_all_gather", "execute_all_reduce",
     "execute_all_to_all", "execute_halo_exchange", "execute_reduce_scatter",
     "make_bucket_grad_hook", "ring_slot",
     "UnroutableError", "fault_map_from_lofamo", "rewrite",
     "axis_fault_penalty", "live_ring", "lower", "lower_all_gather",
     "lower_all_reduce", "lower_all_to_all", "lower_halo_exchange",
-    "lower_p2p", "lower_reduce_scatter", "plan_buckets",
+    "lower_p2p", "lower_reduce_scatter", "lower_route", "plan_buckets",
+    "FabricSim", "FlowResult", "best_route", "candidate_routes",
+    "inject_schedule", "simulate_schedule",
 ]

@@ -36,16 +36,41 @@ class CostEstimate:
 
 def message_time(nbytes: int, net: NetModel | None = None, *,
                  hops: int = 1, **endpoint_kw) -> float:
-    """Single fabric message (the unit every step price is built from)."""
+    """Single fabric message (the unit every step price is built from).
+
+    A zero-byte message (pure sync step) prices header + latency only —
+    injection, reception and the per-hop transits — with no phantom
+    payload byte on the wire.
+    """
     net = net or NetModel()
-    return net.latency(max(int(nbytes), 1), hops=hops, **endpoint_kw)
+    return net.latency(max(int(nbytes), 0), hops=hops, **endpoint_kw)
+
+
+BACKENDS = ("analytic", "sim")
 
 
 def estimate(schedule: CollectiveSchedule, nbytes: int,
-             net: NetModel | None = None, **endpoint_kw) -> CostEstimate:
+             net: NetModel | None = None, *, backend: str = "analytic",
+             **endpoint_kw) -> CostEstimate:
     """Predicted completion time for the collective on an ``nbytes`` input
     (bytes of the per-rank input buffer, matching the transfers' ``frac``
-    base)."""
+    base).
+
+    ``backend="analytic"`` (the fast path) prices every transfer in
+    isolation with the closed-form model above; ``backend="sim"`` replays
+    the schedule on the event-driven link-level simulator
+    (``fabric.sim.simulate_schedule``) — same sequential-rounds rule, but
+    messages become per-link packet walks with credit flow control, so
+    transfers that share a link direction contend.  On single-flow
+    schedules the two must agree (the ``tests/fabric_checks.py``
+    differential); that agreement is the validation of both models.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown cost backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    if backend == "sim":
+        from repro.core.fabric import sim as _sim
+        return _sim.simulate_schedule(schedule, nbytes, net, **endpoint_kw)
     net = net or NetModel()
     phase_s = []
     for ph in schedule.phases:
@@ -116,6 +141,7 @@ def estimate_overlapped(schedule: CollectiveSchedule,
                         net: NetModel | None = None, *,
                         queue_depth: int = 2,
                         issue_gap_s: float = 0.85e-6,
+                        backend: str = "analytic",
                         **endpoint_kw) -> OverlapEstimate:
     """Price a bucketed, compute-overlapped execution of ``schedule``.
 
@@ -130,7 +156,8 @@ def estimate_overlapped(schedule: CollectiveSchedule,
     exactly like the second DMA engine of §2.1; a depth-1 queue pays
     ``issue_gap_s`` per bucket.  The sequential baseline is the monolithic
     post-backward barrier: all compute, then ONE schedule moving the whole
-    payload.
+    payload.  ``backend`` selects how each bucket's wire time is priced
+    (see ``estimate``); the timeline algebra on top is backend-agnostic.
     """
     net = net or NetModel()
     nbytes = (tuple(buckets.bucket_nbytes)
@@ -147,7 +174,8 @@ def estimate_overlapped(schedule: CollectiveSchedule,
         if len(comp) != nb:
             raise ValueError(
                 f"compute trace has {len(comp)} segments for {nb} buckets")
-    comm = tuple(estimate(schedule, b, net, **endpoint_kw).total_s
+    comm = tuple(estimate(schedule, b, net, backend=backend,
+                          **endpoint_kw).total_s
                  for b in nbytes)
     compute_total = sum(comp)
     t = 0.0            # fabric busy-until
@@ -168,7 +196,8 @@ def estimate_overlapped(schedule: CollectiveSchedule,
     busy = sum(comm) + sum(gaps)
     hidden = max(0.0, busy - exposed)
     seq = (compute_total + issue_gap_s
-           + estimate(schedule, sum(nbytes), net, **endpoint_kw).total_s
+           + estimate(schedule, sum(nbytes), net, backend=backend,
+                      **endpoint_kw).total_s
            if nbytes else compute_total)
     return OverlapEstimate(
         total_s=total_s, sequential_s=seq, compute_s=compute_total,

@@ -327,13 +327,37 @@ def lower_p2p(torus: Torus, src: int, dst: int, *,
                 f"no surviving route {src} -> {dst}: the fault map "
                 "partitions the fabric")
         route = path
+    return lower_route(torus, route, faults=faults)
+
+
+def lower_route(torus: Torus, route: Sequence[int], *,
+                faults: FaultMap | None = None) -> CollectiveSchedule:
+    """Lower an *explicit* unicast route (ranks in forwarding order) to a
+    P2P schedule — same shape ``lower_p2p`` produces, but the caller picks
+    the path.  This is the congestion-aware router's entry point: the
+    serving cluster probes ``fabric.sim.candidate_routes`` by simulated
+    completion time and lowers the winner here.  Every consecutive pair
+    must be a live first-neighbour link of the torus."""
+    faults = faults or FaultMap()
+    route = tuple(route)
+    if not route:
+        raise ValueError("empty route")
+    for r in route:
+        if not 0 <= r < torus.size:
+            raise ValueError(f"rank {r} out of range for torus {torus.dims}")
+    for a, b in zip(route, route[1:]):
+        if b not in torus.neighbors(a):
+            raise ValueError(f"route hop {a} -> {b} is not a torus link")
+        if not faults.link_ok(a, b):
+            raise UnroutableError(f"route hop {a} -> {b} is dead")
+    src, dst = route[0], route[-1]
     hops = len(route) - 1
     if hops == 0:
         steps: tuple[Step, ...] = ()
     else:
         steps = (Step((Transfer(perm=((src, dst),), frac=1.0, hops=hops,
                                 combine="write"),)),)
-    phase = Phase(P2P, "route", tuple(route), steps)
+    phase = Phase(P2P, "route", route, steps)
     return CollectiveSchedule(P2P, ("route",), (0,), torus.dims, (phase,),
                               faults, False, False)
 

@@ -248,6 +248,18 @@ class CollectiveSchedule:
         return sum(tr.frac * nbytes for _, st in self.steps()
                    for tr in st.transfers)
 
+    @property
+    def route(self) -> tuple[int, ...]:
+        """The rank-by-rank forwarding route of a P2P (unicast) schedule —
+        the phase ring annotation ``lower_p2p``/``lower_route`` wrote.
+        Consumers (the fabric simulator, ``RdmaEndpoint``) replay the
+        unicast along exactly these links."""
+        if self.collective != P2P:
+            raise ValueError(
+                f"{self.collective} schedules are axis-addressed; only p2p "
+                "schedules carry a rank route")
+        return self.phases[0].ring
+
     def describe(self) -> str:
         lines = [f"{self.collective} over axes {self.axes} "
                  f"on torus {self.torus_dims}"

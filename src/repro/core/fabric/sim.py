@@ -1,0 +1,648 @@
+"""Discrete-event, link-level fabric simulator — the shared timeline every
+time model in the repo can price against.
+
+The analytic estimator (``fabric.cost``) prices each transfer in isolation:
+one ``NetModel.latency`` message over its hops.  That is exact for a single
+flow, but APElink is a *shared-resource* design — per-channel credit-based
+flow control with a ~40 KB footprint (paper §2.3) and dimension-ordered
+routing over links that many in-flight packets compete for.  The companion
+works arXiv:1102.3796 and arXiv:1307.8276 measure exactly that regime:
+aggregate traffic on shared links.  ``FabricSim`` closes the gap:
+
+  * every directed first-neighbour link is a FIFO resource at the APElink
+    sustained payload bandwidth; packets of concurrent flows interleave at
+    packet granularity (a flow keeps ONE packet queued per link head, so
+    the FIFO round-robins flows like the router's VC arbiter);
+  * **credit-based flow control**: each directed link's downstream buffer
+    holds ``credit_bytes`` (default: ``apelink.channel_footprint_bytes`` —
+    the paper's ~40 KB bandwidth-delay product).  A packet only starts
+    crossing a link when the far buffer has room; credits return when the
+    packet leaves that buffer (consumed at the endpoint, or started on the
+    next link).  Congestion therefore backpressures upstream, hop by hop;
+  * **dimension-ordered packet walks**: a flow's route defaults to
+    ``Torus.route`` (X then Y then Z), or the BFS detour over the
+    surviving graph under a ``FaultMap`` — the same one BFS the lowering
+    and fault-rewrite layers use (``lower._bfs_path``);
+  * endpoint costs match the analytic model: ``t_inject`` before the first
+    link, ``t_receive`` after the last, ``t_hop`` per router transit, GPU
+    touch overheads and the GPU-outbound read cap as source pacing.
+
+Consumers:
+
+  * ``fabric.estimate(..., backend="sim")`` — ``simulate_schedule`` walks a
+    ``CollectiveSchedule`` round by round (each round's flows barrier on
+    the previous round, exactly the analytic model's sequential-rounds
+    rule), so the sim and the analytic estimate must agree on single-flow
+    schedules — that differential validates both models;
+  * ``RdmaEndpoint`` (``sim=`` attached) — ``put_pages``/``get_time``
+    inject their DMA drain (a host-interface FIFO resource per rank) and
+    wire legs as flows instead of summing closed-form terms;
+  * ``ServingCluster``/``Engine`` — one cluster-wide sim; decode-step TP
+    collectives and migration PUTs ride the same links and contend;
+  * ``ServingCluster.migrate`` — congestion-aware path selection probes
+    candidate routes (``candidate_routes``, the fault BFS machinery) by
+    simulated completion time instead of hop count.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import heapq
+import itertools
+from typing import Hashable, Sequence
+
+from repro.core import apelink
+from repro.core.apelink import NetModel
+from repro.core.fabric.cost import CostEstimate
+from repro.core.fabric.lower import UnroutableError, _bfs_path, _lanes
+from repro.core.fabric.schedule import (
+    P2P, CollectiveSchedule, FaultMap, Phase, Transfer)
+from repro.core.topology import Torus
+
+# flows bigger than max_packets * packet_bytes coarsen their packets so the
+# event count stays bounded; packets never exceed the credit window (a
+# packet larger than the far buffer could never be granted credit)
+DEFAULT_PACKET_BYTES = 4096
+DEFAULT_MAX_PACKETS = 256
+
+
+class _Link:
+    """One directed link (or host-IF resource): FIFO + credit window."""
+
+    __slots__ = ("free_at", "queue", "credit", "busy_s", "bytes_carried",
+                 "retry_at")
+
+    def __init__(self, credit: float) -> None:
+        self.free_at = 0.0
+        self.queue: list = []        # FIFO of _Pkt waiting to transmit
+        self.credit = credit         # downstream buffer bytes available
+        self.busy_s = 0.0
+        self.bytes_carried = 0.0
+        self.retry_at: float | None = None   # pending retry event (dedup)
+
+
+class _Pkt:
+    __slots__ = ("fid", "idx", "hop", "nbytes", "prev")
+
+    def __init__(self, fid: int, idx: int, hop: int, nbytes: float,
+                 prev: tuple | None) -> None:
+        self.fid = fid
+        self.idx = idx           # packet index within the flow
+        self.hop = hop           # index of the link being traversed
+        self.nbytes = nbytes
+        self.prev = prev         # upstream link key owed a credit return
+
+
+class _Flow:
+    __slots__ = ("fid", "route", "nbytes", "pkt_bytes", "npkts", "sent",
+                 "arrived", "req_start", "start_s", "finish_s", "pending",
+                 "dependents", "src_over", "dst_over", "pace_s", "service_s",
+                 "resource", "channel", "label")
+
+    def __init__(self, fid: int) -> None:
+        self.fid = fid
+        self.route: tuple[int, ...] = ()
+        self.nbytes = 0.0
+        self.pkt_bytes = 0.0
+        self.npkts = 0
+        self.sent = 0
+        self.arrived = 0
+        self.req_start = 0.0
+        self.start_s: float | None = None
+        self.finish_s: float | None = None
+        self.pending = 0                 # unfinished dependencies
+        self.dependents: list[int] = []
+        self.src_over = 0.0
+        self.dst_over = 0.0
+        self.pace_s = 0.0                # source pacing gap (GPU read cap)
+        self.service_s: float | None = None   # resource occupancy duration
+        self.resource: Hashable | None = None
+        self.channel = 0                 # cable pick on 2-rings (see below)
+        self.label = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowResult:
+    """Completed flow, as reported by ``FabricSim.flow``."""
+
+    fid: int
+    src: int
+    dst: int
+    nbytes: float
+    hops: int
+    start_s: float
+    finish_s: float
+    label: str = ""
+
+    @property
+    def duration_s(self) -> float:
+        return self.finish_s - self.start_s
+
+    @property
+    def bandwidth(self) -> float:
+        d = self.duration_s
+        return self.nbytes / d if d > 0 else float("inf")
+
+
+class FabricSim:
+    """Event-driven link-level simulator over one ``Torus`` fabric.
+
+    Flows are injected (``inject`` for wire transfers, ``occupy`` for
+    rank-local host-interface DMA occupancy), optionally chained with
+    ``after=``; ``run()`` drains the event queue.  The clock only moves
+    forward: ``now`` is the frontier, and a timeline owner (the serving
+    cluster) can ``advance`` it between logical windows.  Injecting at a
+    time the simulator already processed is allowed but conservative —
+    the new packets queue behind whatever the links already committed to.
+    """
+
+    def __init__(self, torus: Torus, net: NetModel | None = None, *,
+                 packet_bytes: int = DEFAULT_PACKET_BYTES,
+                 credit_bytes: float | None = None,
+                 max_packets_per_flow: int = DEFAULT_MAX_PACKETS,
+                 faults: FaultMap | None = None) -> None:
+        if packet_bytes <= 0:
+            raise ValueError(f"packet_bytes must be > 0, got {packet_bytes}")
+        self.torus = torus
+        self.net = net or NetModel()
+        self.faults = faults or FaultMap()
+        self.link_bw = apelink.sustained_bandwidth(self.net.link)
+        self.credit_bytes = (float(credit_bytes) if credit_bytes is not None
+                             else apelink.channel_footprint_bytes(
+                                 self.net.link))
+        if self.credit_bytes <= 0:
+            raise ValueError("credit_bytes must be > 0")
+        self.packet_bytes = min(packet_bytes, int(self.credit_bytes) or 1)
+        self.max_packets = max(1, max_packets_per_flow)
+        self._links: dict = {}
+        self._flows: dict[int, _Flow] = {}
+        self._heap: list = []
+        self._seq = itertools.count()
+        self._next_fid = itertools.count()
+        self._frontier = 0.0
+
+    # -- clock ----------------------------------------------------------------
+    @property
+    def now(self) -> float:
+        """The timeline frontier (latest processed/advanced time)."""
+        return self._frontier
+
+    def advance(self, t: float) -> None:
+        """Move the frontier forward (never backward) — the timeline
+        owner's logical-window boundary."""
+        self._frontier = max(self._frontier, t)
+
+    # -- link identity --------------------------------------------------------
+    def _link_key(self, u: int, v: int, channel: int) -> tuple:
+        """Physical cable identity of the hop u -> v.
+
+        Every node wires BOTH ports of each dimension (6 links per node on
+        a 3D torus), so the +1 and -1 traversal directions are distinct
+        cables even when they join the same rank pair — which happens
+        exactly on 2-rings, where the dual-DMA round's two transfers ride
+        the two parallel cables concurrently (the analytic model's
+        disjoint-directions rule).  For rings > 2 the direction is
+        implied by the coordinates; on a 2-ring the flow's ``channel``
+        hint disambiguates.
+        """
+        cu, cv = self.torus.coords(u), self.torus.coords(v)
+        for d, (a, b) in enumerate(zip(cu, cv)):
+            if a != b:
+                n = self.torus.dims[d]
+                if n == 2:
+                    return (u, v, channel & 1)
+                return (u, v, 0 if (b - a) % n == 1 else 1)
+        return (u, v, 0)   # self-link (unused)
+
+    # -- injection ------------------------------------------------------------
+    def _resolve_route(self, src: int, dst: int,
+                       route: Sequence[int] | None) -> tuple[int, ...]:
+        if route is not None:
+            route = tuple(route)
+            if len(route) < 1 or route[0] != src or route[-1] != dst:
+                raise ValueError(f"route {route} does not join {src}->{dst}")
+            return route
+        if src == dst:
+            return (src,)
+        if not self.faults:
+            return tuple(self.torus.route(src, dst))
+        path = _bfs_path(self.torus, src, dst, self.faults)
+        if path is None:
+            raise UnroutableError(
+                f"no surviving route {src} -> {dst} in the simulated fabric")
+        return tuple(path)
+
+    def _packetize(self, nbytes: float) -> tuple[float, int]:
+        if nbytes <= 0:
+            return 0.0, 1
+        pkt = float(self.packet_bytes)
+        npkts = -(-nbytes // pkt)
+        if npkts > self.max_packets:
+            pkt = min(nbytes / self.max_packets, self.credit_bytes)
+        return pkt, int(-(-nbytes // pkt))
+
+    def _new_flow(self, start_s: float | None,
+                  after: Sequence[int]) -> _Flow:
+        f = _Flow(next(self._next_fid))
+        f.req_start = self._frontier if start_s is None else float(start_s)
+        self._flows[f.fid] = f
+        for dep_fid in after:
+            dep = self._flows[dep_fid]
+            if dep.finish_s is None:
+                dep.dependents.append(f.fid)
+                f.pending += 1
+            else:
+                f.req_start = max(f.req_start, dep.finish_s)
+        if f.pending == 0:
+            self._push(f.req_start, "start", f.fid)
+        return f
+
+    def inject(self, src: int, dst: int, nbytes: float, *,
+               start_s: float | None = None,
+               route: Sequence[int] | None = None,
+               after: Sequence[int] = (),
+               src_gpu: bool = False, dst_gpu: bool = False,
+               channel: int = 0, label: str = "") -> int:
+        """Inject one flow of ``nbytes`` from rank ``src`` to ``dst``.
+
+        ``route`` overrides the dimension-ordered (or fault-BFS) default;
+        ``after`` lists flow ids that must finish first; ``channel`` picks
+        the cable on ambiguous 2-ring hops (see ``_link_key``).  Returns
+        the flow id — query its completion with ``finish_s``/``flow``
+        after ``run()``.
+        """
+        f = self._new_flow(start_s, after)
+        f.route = self._resolve_route(src, dst, route)
+        f.channel = channel
+        f.nbytes = float(nbytes)
+        f.pkt_bytes, f.npkts = self._packetize(f.nbytes)
+        f.src_over = self.net.t_inject \
+            + (self.net.gpu_touch_overhead if src_gpu else 0.0)
+        f.dst_over = self.net.t_receive \
+            + (self.net.gpu_touch_overhead if dst_gpu else 0.0)
+        if src_gpu and self.net.gpu_read_cap < self.link_bw:
+            # GPU-outbound read bottleneck (Fig 3c): the source cannot feed
+            # the link faster than the P2P read rate
+            f.pace_s = f.pkt_bytes / self.net.gpu_read_cap
+        f.label = label
+        return f.fid
+
+    def occupy(self, resource: Hashable, busy_s: float, *,
+               start_s: float | None = None,
+               after: Sequence[int] = (), label: str = "") -> int:
+        """Occupy a rank-local FIFO resource (e.g. ``("hostif", rank)``)
+        for ``busy_s`` seconds — the host-interface DMA drain of one
+        operation.  Concurrent occupiers of the same resource serialize."""
+        if busy_s < 0:
+            raise ValueError(f"negative busy_s {busy_s}")
+        f = self._new_flow(start_s, after)
+        f.resource = resource
+        f.service_s = float(busy_s)
+        f.npkts = 1
+        f.label = label
+        return f.fid
+
+    # -- event machinery ------------------------------------------------------
+    def _push(self, t: float, kind: str, arg) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, arg))
+
+    def _link(self, key) -> _Link:
+        link = self._links.get(key)
+        if link is None:
+            link = self._links[key] = _Link(self.credit_bytes)
+        return link
+
+    def _enqueue(self, key, pkt: _Pkt, now: float) -> None:
+        self._link(key).queue.append(pkt)
+        self._try_start(key, now)
+
+    def _try_start(self, key, now: float) -> None:
+        link = self._link(key)
+        while link.queue:
+            if link.free_at > now:
+                # one pending retry per link: re-pushing at the same (or a
+                # later) wake time only duplicates work the scheduled one
+                # will do anyway
+                if link.retry_at is None or link.retry_at > link.free_at \
+                        or link.retry_at <= now:
+                    self._push(link.free_at, "retry", key)
+                    link.retry_at = link.free_at
+                return
+            pkt: _Pkt = link.queue[0]
+            flow = self._flows[pkt.fid]
+            is_resource = flow.resource is not None
+            if not is_resource and pkt.nbytes > link.credit:
+                return   # head-of-line blocked until credit returns
+            link.queue.pop(0)
+            if is_resource:
+                dur = flow.service_s or 0.0
+            else:
+                link.credit -= pkt.nbytes
+                dur = pkt.nbytes / self.link_bw
+            start = max(link.free_at, now)
+            link.free_at = start + dur
+            link.busy_s += dur
+            link.bytes_carried += pkt.nbytes
+            if pkt.prev is not None:
+                # the packet left the upstream buffer: credit flows back
+                up = self._link(pkt.prev)
+                up.credit += pkt.nbytes
+                self._try_start(pkt.prev, now)
+            if is_resource:
+                self._push(link.free_at, "done", pkt)
+                continue
+            if pkt.hop == 0 and flow.sent < flow.npkts:
+                self._feed_source(flow, start)
+            self._push(link.free_at + self.net.t_hop, "arrive", pkt)
+
+    def _feed_source(self, flow: _Flow, now: float) -> None:
+        """Queue the flow's next packet at the first link.
+
+        One packet per flow sits at the link head at a time, so the FIFO
+        round-robins concurrent flows at packet granularity (the VC
+        arbiter); ``pace_s`` throttles GPU-outbound sources."""
+        idx = flow.sent
+        flow.sent += 1
+        last = flow.npkts - 1
+        nbytes = (flow.nbytes - last * flow.pkt_bytes) if idx == last \
+            else flow.pkt_bytes
+        pkt = _Pkt(flow.fid, idx, 0, max(nbytes, 0.0), None)
+        ready = (flow.start_s or 0.0) + flow.src_over + idx * flow.pace_s
+        key = self._link_key(flow.route[0], flow.route[1], flow.channel)
+        if ready > now:
+            self._push(ready, "enqueue", (key, pkt))
+        else:
+            self._enqueue(key, pkt, now)
+
+    def _finish_flow(self, flow: _Flow, t: float) -> None:
+        flow.finish_s = t
+        self._frontier = max(self._frontier, t)
+        for dep_fid in flow.dependents:
+            dep = self._flows[dep_fid]
+            dep.pending -= 1
+            dep.req_start = max(dep.req_start, t)
+            if dep.pending == 0:
+                self._push(dep.req_start, "start", dep.fid)
+        flow.dependents = []
+
+    def _start_flow(self, flow: _Flow, now: float) -> None:
+        flow.start_s = now
+        if flow.resource is not None:
+            self._enqueue(flow.resource, _Pkt(flow.fid, 0, 0, 0.0, None), now)
+            return
+        if len(flow.route) < 2:      # self-send: no wire
+            self._finish_flow(flow, now)
+            return
+        self._feed_source(flow, now)
+
+    def run(self) -> float:
+        """Process every pending event; returns the frontier time."""
+        while self._heap:
+            t, _, kind, arg = heapq.heappop(self._heap)
+            self._frontier = max(self._frontier, t)
+            if kind == "start":
+                self._start_flow(self._flows[arg], t)
+            elif kind == "retry":
+                link = self._link(arg)
+                if link.retry_at is not None and link.retry_at <= t:
+                    link.retry_at = None
+                self._try_start(arg, t)
+            elif kind == "enqueue":
+                key, pkt = arg
+                self._enqueue(key, pkt, t)
+            elif kind == "done":
+                self._finish_flow(self._flows[arg.fid], t)
+            elif kind == "arrive":
+                pkt: _Pkt = arg
+                flow = self._flows[pkt.fid]
+                here = pkt.hop + 1
+                link_key = self._link_key(flow.route[pkt.hop],
+                                          flow.route[here], flow.channel)
+                if here == len(flow.route) - 1:
+                    # consumed at the endpoint: buffer drains immediately
+                    up = self._link(link_key)
+                    up.credit += pkt.nbytes
+                    self._try_start(link_key, t)
+                    flow.arrived += 1
+                    if flow.arrived == flow.npkts:
+                        self._finish_flow(flow, t + flow.dst_over)
+                else:
+                    nxt = self._link_key(flow.route[here],
+                                         flow.route[here + 1], flow.channel)
+                    pkt.hop = here
+                    pkt.prev = link_key
+                    self._enqueue(nxt, pkt, t)
+        return self._frontier
+
+    # -- results --------------------------------------------------------------
+    def finish_s(self, fid: int) -> float:
+        flow = self._flows[fid]
+        if flow.finish_s is None:
+            self.run()
+        if flow.finish_s is None:
+            raise RuntimeError(f"flow {fid} never completed "
+                               "(unsatisfied dependency?)")
+        return flow.finish_s
+
+    def flow(self, fid: int) -> FlowResult:
+        f = self._flows[fid]
+        return FlowResult(
+            fid=fid,
+            src=f.route[0] if f.route else -1,
+            dst=f.route[-1] if f.route else -1,
+            nbytes=f.nbytes, hops=max(len(f.route) - 1, 0),
+            start_s=f.start_s if f.start_s is not None else f.req_start,
+            finish_s=self.finish_s(fid), label=f.label)
+
+    def link_stats(self) -> dict:
+        """Per-directed-link busy seconds and carried bytes (reporting)."""
+        return {k: {"busy_s": v.busy_s, "bytes": v.bytes_carried}
+                for k, v in self._links.items()}
+
+    def prune(self) -> int:
+        """Drop finished flows from the registry; returns how many.
+
+        A long-lived timeline (the serving cluster's) accumulates settled
+        flows forever otherwise, growing both the resident sim and every
+        ``probe_route`` deep copy without bound.  The owner calls this
+        once its window accounting has read the finishes it needs —
+        pruned flow ids can no longer be queried or used as ``after=``
+        dependencies.  Link state (busy-until, credits, queues) is live
+        scheduling state and is kept."""
+        done = [fid for fid, f in self._flows.items()
+                if f.finish_s is not None]
+        for fid in done:
+            del self._flows[fid]
+        return len(done)
+
+    # -- what-if probing -------------------------------------------------------
+    def probe_route(self, route: Sequence[int], nbytes: float, *,
+                    start_s: float | None = None, **kw) -> float:
+        """Simulated completion time of a hypothetical flow along
+        ``route`` against the CURRENT traffic, without committing anything
+        to the timeline (runs on a deep copy)."""
+        ghost = copy.deepcopy(self)
+        start = ghost.now if start_s is None else start_s
+        fid = ghost.inject(route[0], route[-1], nbytes, start_s=start,
+                           route=route, **kw)
+        return ghost.finish_s(fid) - start
+
+
+# ----------------------------------------------------------------------------
+# schedule traffic: CollectiveSchedule -> flows
+# ----------------------------------------------------------------------------
+
+def _transfer_endpoints(torus: Torus, schedule: CollectiveSchedule,
+                        phase: Phase, tr: Transfer):
+    """(src_rank, dst_rank, route|None) triples for one transfer —
+    every lane of the phase axis carries the ppermute's messages."""
+    if phase.kind == P2P:
+        yield phase.ring[0], phase.ring[-1], phase.ring
+        return
+    dim = schedule.axis_dims[schedule.axes.index(phase.axis)]
+    dead = schedule.faults.dead_nodes
+    for lane in _lanes(torus, dim):
+        for a, b in tr.perm:
+            ca = tuple(a if c is None else c for c in lane)
+            cb = tuple(b if c is None else c for c in lane)
+            ra, rb = torus.rank(ca), torus.rank(cb)
+            if ra in dead or rb in dead:
+                continue
+            yield ra, rb, None
+
+
+def inject_schedule(sim: FabricSim, schedule: CollectiveSchedule,
+                    nbytes: float, *, start_s: float | None = None,
+                    after: Sequence[int] = (),
+                    granularity: str = "phase",
+                    **endpoint_kw) -> list[int]:
+    """Inject a collective's traffic into a (shared) sim; returns the
+    tail flow ids (the collective is done when all of them finish).
+
+    ``granularity="round"`` barriers every wall-clock round on the
+    previous one — the analytic model's sequential-rounds rule, used by
+    the ``backend="sim"`` estimator.  ``granularity="phase"`` aggregates
+    each phase's rounds into one flow per (lane, direction) — per-link
+    bytes identical, round barriers elided — the cheap form the serving
+    timeline uses for background traffic.
+    """
+    if granularity not in ("round", "phase"):
+        raise ValueError(f"unknown granularity {granularity!r}")
+    tail = list(after)
+    for ph in schedule.phases:
+        if not ph.steps:
+            continue
+        if granularity == "phase":
+            fids = []
+            rounds = len(ph.steps)
+            for ti, tr in enumerate(ph.steps[0].transfers):
+                for ra, rb, route in _transfer_endpoints(
+                        sim.torus, schedule, ph, tr):
+                    fids.append(sim.inject(
+                        ra, rb, tr.frac * nbytes * rounds, start_s=start_s,
+                        route=route, after=tuple(tail), channel=ti,
+                        **endpoint_kw))
+            if fids:
+                tail = fids
+        else:
+            for st in ph.steps:
+                fids = []
+                for ti, tr in enumerate(st.transfers):
+                    for ra, rb, route in _transfer_endpoints(
+                            sim.torus, schedule, ph, tr):
+                        fids.append(sim.inject(
+                            ra, rb, tr.frac * nbytes, start_s=start_s,
+                            route=route, after=tuple(tail), channel=ti,
+                            **endpoint_kw))
+                if fids:
+                    tail = fids
+    return tail
+
+
+def simulate_schedule(schedule: CollectiveSchedule, nbytes: int,
+                      net: NetModel | None = None,
+                      **endpoint_kw) -> CostEstimate:
+    """Event-driven price of one collective on a quiet fabric — the
+    ``backend="sim"`` path of ``fabric.estimate``.
+
+    Rounds barrier on each other exactly like the analytic model's
+    sequential steps, so on single-flow schedules (no two messages of a
+    round sharing a link direction) the two backends must agree — the
+    differential in ``tests/fabric_checks.py`` holds both to it.
+    """
+    sim = FabricSim(Torus(schedule.torus_dims), net,
+                    faults=schedule.faults)
+    phase_s = []
+    t = 0.0
+    tail: list[int] = []
+    for ph in schedule.phases:
+        sub = dataclasses.replace(schedule, phases=(ph,))
+        new_tail = inject_schedule(sim, sub, nbytes, start_s=t,
+                                   after=tuple(tail), granularity="round",
+                                   **endpoint_kw)
+        if new_tail != list(tail):
+            tail = new_tail
+            sim.run()
+            end = max(sim.finish_s(f) for f in tail)
+        else:
+            end = t
+        phase_s.append(max(end - t, 0.0))
+        t = end
+    return CostEstimate(total_s=t, phase_s=tuple(phase_s),
+                        rounds=schedule.rounds,
+                        bytes_per_rank=schedule.bytes_per_rank(nbytes),
+                        max_hops=schedule.max_hops)
+
+
+# ----------------------------------------------------------------------------
+# congestion-aware route selection (fault.py's BFS machinery, probed by
+# simulated completion time)
+# ----------------------------------------------------------------------------
+
+def candidate_routes(torus: Torus, src: int, dst: int,
+                     faults: FaultMap | None = None) -> list[tuple[int, ...]]:
+    """Loop-free candidate routes src -> dst over the surviving fabric:
+    the dimension-ordered minimal path plus, per live first hop, the BFS
+    shortest path that commits to that first link (the detour family the
+    router could select).  Sorted by hop count; raises ``UnroutableError``
+    when no route survives."""
+    faults = faults or FaultMap()
+    for r in (src, dst):
+        if r in faults.dead_nodes:
+            raise UnroutableError(f"route endpoint rank {r} is dead")
+    if src == dst:
+        return [(src,)]
+    routes: list[tuple[int, ...]] = []
+    if not faults:
+        routes.append(tuple(torus.route(src, dst)))
+    src_blocked = FaultMap(faults.dead_nodes | {src}, faults.dead_links)
+    for n in torus.neighbors(src):
+        if not faults.link_ok(src, n):
+            continue
+        if n == dst:
+            path: list[int] | None = [n]
+        else:
+            path = _bfs_path(torus, n, dst, src_blocked)
+        if path is None:
+            continue
+        routes.append((src, *path))
+    seen: set[tuple[int, ...]] = set()
+    out = [r for r in routes if not (r in seen or seen.add(r))]
+    if not out:
+        raise UnroutableError(
+            f"no surviving route {src} -> {dst}: the fault map "
+            "partitions the fabric")
+    return sorted(out, key=len)
+
+
+def best_route(sim: FabricSim, src: int, dst: int, nbytes: float, *,
+               faults: FaultMap | None = None,
+               start_s: float | None = None) -> tuple[tuple[int, ...], float]:
+    """The candidate route with the least *simulated* completion time
+    against the sim's current traffic (ties break toward fewer hops —
+    candidates come sorted, and ``min`` is stable)."""
+    cands = candidate_routes(sim.torus, src, dst, faults)
+    timed = [(sim.probe_route(r, nbytes, start_s=start_s), len(r), r)
+             for r in cands]
+    t, _, route = min(timed, key=lambda x: (x[0], x[1]))
+    return route, t

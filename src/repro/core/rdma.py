@@ -91,10 +91,18 @@ class RdmaEndpoint:
 
     def __init__(self, torus: Torus, rank: int, *, tlb_entries: int = 512,
                  engines: int = 2, cq_slots: int | None = None,
-                 net: apelink.NetModel | None = None) -> None:
+                 net: apelink.NetModel | None = None,
+                 sim: "object | None" = None) -> None:
         self.torus = torus
         self.rank = rank
         self.engines = engines
+        # shared fabric timeline (core.fabric.sim.FabricSim): when attached,
+        # put_pages/get_time inject their host-IF DMA drain and wire legs as
+        # flows on it instead of summing closed-form terms, so concurrent
+        # operations — this card's or any other card sharing the sim —
+        # contend for links and host-interface slots.  None = closed-form.
+        self.sim = sim
+        self.last_put_report: dict | None = None
         # prefetchable command queue (§2.1): in-flight descriptor slots.
         # Two per engine by default — one draining, one prefetched — which
         # is what lets the second engine start without waiting for the
@@ -119,12 +127,26 @@ class RdmaEndpoint:
         region = Region(self._next, self._next_vaddr, nbytes)
         self._regions[self._next] = region
         self._next += 1
-        self._next_vaddr += (nbytes + PAGE_BYTES - 1) // PAGE_BYTES * PAGE_BYTES
+        # reserve at least one page: translate_region/deregister treat the
+        # first page as owned even for zero-byte regions, so the address
+        # space must too — otherwise a 0-byte region aliases the next
+        # registration's vaddr and deregistering it would shoot down a
+        # LIVE region's translations
+        self._next_vaddr += (max(nbytes, 1) + PAGE_BYTES - 1) \
+            // PAGE_BYTES * PAGE_BYTES
         return region
 
     def deregister(self, region: Region) -> None:
+        """Unpin the region and shoot down its TLB entries.
+
+        The sweep must cover exactly what translation can populate:
+        ``translate_region`` walks ``max(nbytes, 1)`` bytes (a zero-byte
+        region still owns its first page), so deregistering sweeps the
+        same range — otherwise a stale translation for that page could
+        hit after the region is gone.
+        """
         del self._regions[region.handle]
-        for off in range(0, region.nbytes, PAGE_BYTES):
+        for off in range(0, max(region.nbytes, 1), PAGE_BYTES):
             self.tlb.invalidate(region.vaddr + off)
 
     def _check_registered(self, region: Region) -> None:
@@ -157,6 +179,13 @@ class RdmaEndpoint:
         requests outstanding, hiding the gap whenever (k-1)*t_xfer >= gap.
         Calibration reproduces both §2.1 claims: single-engine efficiency
         ~0.5 and dual-engine total-time reduction ~40% (Fig 1).
+
+        This is the *service time* of one DMA drain.  With a shared
+        ``FabricSim`` attached, ``put_pages``/``get_time`` do not add it
+        as a closed-form term: they occupy the card's host-interface FIFO
+        resource (``("hostif", rank)``) on the shared timeline for this
+        duration, so concurrent operations on one card queue behind each
+        other.
         """
         k = engines if engines is not None else self.engines
         nreq = max(1, (nbytes + max_payload - 1) // max_payload)
@@ -202,19 +231,43 @@ class RdmaEndpoint:
         self._check_registered(region)
         if page_nbytes <= 0:
             raise ValueError(f"page_nbytes must be > 0, got {page_nbytes}")
-        t = self._translate_pages(self.tlb, region, pages, page_nbytes)
-        nbytes = len(pages) * page_nbytes
-        t += self.transfer_time(nbytes)
         from repro.core import fabric
+        t_src = self._translate_pages(self.tlb, region, pages, page_nbytes)
+        nbytes = len(pages) * page_nbytes
         sched = schedule if schedule is not None else fabric.lower_p2p(
             self.torus, self.rank, dst, faults=faults)
-        t += fabric.estimate(sched, nbytes, self.net).total_s
+        t_dma = self.transfer_time(nbytes)
+        t_wire = fabric.estimate(sched, nbytes, self.net).total_s
+        t_dst = 0.0
         if dst_endpoint is not None and dst_region is not None:
             dst_endpoint._check_registered(dst_region)
-            t += self._translate_pages(
+            t_dst = self._translate_pages(
                 dst_endpoint.tlb, dst_region,
                 dst_pages if dst_pages is not None else pages, page_nbytes)
-        return t
+        # the sum-of-isolated price: what this PUT costs on a quiet fabric
+        isolated = t_src + t_dma + t_wire + t_dst
+        if self.sim is None:
+            self.last_put_report = {"total_s": isolated,
+                                    "isolated_s": isolated,
+                                    "dma_s": t_dma, "wire_s": t_wire,
+                                    "translate_s": t_src + t_dst}
+            return isolated
+        # shared timeline: the DMA drain occupies this card's host-IF slot,
+        # then the payload walks the route packet by packet — both legs
+        # contending with whatever else is in flight on the sim
+        start = self.sim.now
+        route = sched.route if sched.collective == fabric.P2P else None
+        dma = self.sim.occupy(("hostif", self.rank), t_dma,
+                              start_s=start + t_src,
+                              label=f"put_dma r{self.rank}")
+        wire = self.sim.inject(self.rank, dst, nbytes, route=route,
+                               after=(dma,),
+                               label=f"put {self.rank}->{dst}")
+        total = (self.sim.finish_s(wire) - start) + t_dst
+        self.last_put_report = {"total_s": total, "isolated_s": isolated,
+                                "dma_s": t_dma, "wire_s": t_wire,
+                                "translate_s": t_src + t_dst}
+        return total
 
     def get_time(self, src: int, nbytes: int, region: Region, *,
                  faults=None) -> float:
@@ -225,16 +278,31 @@ class RdmaEndpoint:
         travels to ``src``, whose card streams the payload back along the
         reversed route; the local landing buffer is translated before the
         RX DMA can scatter into it.  Both legs reroute around ``faults``
-        like ``put_pages``.
+        like ``put_pages``.  With a shared ``FabricSim`` attached the
+        three legs become chained timeline events (request flow -> remote
+        host-IF occupancy -> payload flow) instead of closed-form terms.
         """
         from repro.core import fabric
-        t = self.translate_region(region)
+        t_local = self.translate_region(region)
         req = fabric.lower_p2p(self.torus, self.rank, src, faults=faults)
         back = fabric.lower_p2p(self.torus, src, self.rank, faults=faults)
-        t += fabric.estimate(req, 64, self.net).total_s   # GET descriptor
-        t += self.transfer_time(nbytes)                   # remote DMA drain
-        t += fabric.estimate(back, nbytes, self.net).total_s
-        return t
+        if self.sim is None:
+            t = t_local
+            t += fabric.estimate(req, 64, self.net).total_s  # GET descriptor
+            t += self.transfer_time(nbytes)                  # remote drain
+            t += fabric.estimate(back, nbytes, self.net).total_s
+            return t
+        start = self.sim.now
+        fid_req = self.sim.inject(self.rank, src, 64, route=req.route,
+                                  start_s=start + t_local,
+                                  label=f"get_req {self.rank}->{src}")
+        fid_dma = self.sim.occupy(("hostif", src),
+                                  self.transfer_time(nbytes),
+                                  after=(fid_req,), label=f"get_dma r{src}")
+        fid_back = self.sim.inject(src, self.rank, nbytes, route=back.route,
+                                   after=(fid_dma,),
+                                   label=f"get {src}->{self.rank}")
+        return self.sim.finish_s(fid_back) - start
 
     @staticmethod
     def _translate_pages(tlb: Tlb, region: Region, pages: Sequence[int],

@@ -78,6 +78,11 @@ class TrainerConfig:
     # are identical to the sequential step (fp32 params: bitwise).
     overlap: bool = False
     bucket_mb: float = 4.0          # bucket size target (MB of fp32 grads)
+    # fabric time-model backend for predicted_comm_s / the overlap
+    # estimate: "analytic" (closed-form, the fast default) or "sim" (the
+    # event-driven link-level FabricSim replay — same number on healthy
+    # single-flow schedules, honest contention pricing under detours)
+    cost_backend: str = "analytic"
     wd_period: float = 0.5          # LO|FA|MO watchdog period (seconds)
     straggler_factor: float = 3.0   # step slower than this x median -> flag
     seed: int = 0
@@ -239,11 +244,14 @@ class Trainer:
         schedules the step executes (fabric cost model)."""
         axis = self.tcfg.dp_axis
         dp = self.mesh.shape[axis]
-        total = fabric.estimate(scheds["loss"], 4).total_s
+        backend = self.tcfg.cost_backend
+        total = fabric.estimate(scheds["loss"], 4, backend=backend).total_s
         for p in jax.tree.leaves(self.params):
             chunk_bytes = -(-p.size // dp) * p.dtype.itemsize
-            total += fabric.estimate(scheds["rs"], 4 * p.size).total_s
-            total += fabric.estimate(scheds["ag"], chunk_bytes).total_s
+            total += fabric.estimate(scheds["rs"], 4 * p.size,
+                                     backend=backend).total_s
+            total += fabric.estimate(scheds["ag"], chunk_bytes,
+                                     backend=backend).total_s
         return total
 
     def _bwd_compute_model_s(self) -> float:
@@ -275,7 +283,8 @@ class Trainer:
             self.bucket_plan = fabric.plan_buckets(self.params, bucket_bytes)
             self.overlap_estimate = fabric.estimate_overlapped(
                 scheds["rs"], self.bucket_plan, self._bwd_compute_model_s(),
-                queue_depth=self.rdma.queue_depth)
+                queue_depth=self.rdma.queue_depth,
+                backend=self.tcfg.cost_backend)
         else:
             self.bucket_plan = None
             self.overlap_estimate = None

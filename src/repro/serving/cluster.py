@@ -35,6 +35,16 @@ The alternative to migrating ~len(context) * bytes_per_token of KV is
 re-prefilling the context on B — a whole-prompt forward that stalls B's
 running decode batch.  ``MigrationReport`` carries both modelled numbers;
 ``benchmarks/migration.py`` gates migration being the cheaper move.
+
+Time is ONE shared fabric timeline (``fabric.FabricSim``): every node's
+RDMA endpoint and per-decode-step TP collectives inject flows into the
+same event-driven, link-level simulator, so a migration PUT issued while
+decode traffic is in flight is priced *with* the contention (and slows
+the decode comm in return) — ``MigrationReport.contention_slowdown``
+reports how much the old sum-of-isolated models under-priced the move.
+``migrate`` picks its route by simulated completion time against that
+live traffic (``route_policy="congestion"``), not hop count;
+``benchmarks/contention.py`` gates both behaviours.
 """
 from __future__ import annotations
 
@@ -46,6 +56,7 @@ import numpy as np
 import jax
 
 from repro.core import fabric
+from repro.core.apelink import NetModel
 from repro.core.hw import PAPER_GPU_EFF_FLOPS as GPU_EFF_FLOPS
 from repro.core.topology import Torus
 from repro.models.common import ArchCfg
@@ -72,17 +83,28 @@ class MigrationReport:
     nbytes: int                  # KV payload on the wire
     hops: int                    # route length actually taken
     min_hops: int                # healthy-fabric dimension-ordered distance
-    modelled_s: float            # put_pages: translation + DMA + wire
+    modelled_s: float            # put_pages: translation + DMA + wire,
+    #                              priced on the shared timeline (contended)
     reprefill_s: float           # the decode stall migrating avoided
+    isolated_s: float = 0.0      # sum-of-isolated price (quiet fabric)
+    route_policy: str = "hops"   # how the route was picked
 
     @property
     def rerouted(self) -> bool:
+        """Route longer than the healthy minimal one — a fault detour or a
+        congestion-motivated one."""
         return self.hops > self.min_hops
 
     @property
     def speedup(self) -> float:
         """Avoided stall per second of modelled migration time."""
         return self.reprefill_s / self.modelled_s if self.modelled_s else 0.0
+
+    @property
+    def contention_slowdown(self) -> float:
+        """Contended price / quiet-fabric price (1.0 = nothing in the
+        way); > 1 means the old sum-of-isolated models under-priced it."""
+        return self.modelled_s / self.isolated_s if self.isolated_s else 1.0
 
 
 @dataclasses.dataclass
@@ -110,18 +132,28 @@ class ServingCluster:
                  node_ranks: Sequence[int] | None = None,
                  max_batch: int = 4, max_seq: int = 64,
                  page_tokens: int = 16, pool_pages: int | None = None,
-                 chunked_prefill: bool = False) -> None:
+                 chunked_prefill: bool = False,
+                 tp_axes: tuple[str, ...] | None = (),
+                 net=None, sim_kw: dict | None = None) -> None:
         self.cfg = cfg
         self.torus = torus
         ranks = tuple(node_ranks) if node_ranks is not None \
             else tuple(torus.all_ranks())
         if len(set(ranks)) != len(ranks):
             raise ValueError(f"repeated node ranks {ranks}")
+        # ONE event-driven timeline for the whole cluster: every node's
+        # RDMA endpoint and decode-step TP collectives inject flows here,
+        # so a migration PUT and live decode traffic genuinely contend for
+        # the links they share (fabric.sim.FabricSim); one NetModel prices
+        # every node's wire identically
+        self.net = net or NetModel()
+        self.sim = fabric.FabricSim(torus, self.net, **(sim_kw or {}))
         self.nodes: dict[int, ClusterNode] = {}
         for r in ranks:
             lm = PagedLM(cfg, params, max_batch=max_batch, max_seq=max_seq,
                          page_tokens=page_tokens, pool_pages=pool_pages,
-                         torus=torus, tp_axes=(), rank=r)
+                         torus=torus, tp_axes=tp_axes, rank=r,
+                         sim=self.sim, net=self.net)
             self.nodes[r] = ClusterNode(
                 r, lm, Engine(lm, chunked_prefill=chunked_prefill))
         self.page_nbytes = (page_tokens
@@ -130,6 +162,8 @@ class ServingCluster:
                             for x in jax.tree.leaves(params))
         self.faults = fabric.FaultMap()
         self.migrations: list[MigrationReport] = []
+        self._window_start = 0.0
+        self._window_open = False
 
     # -- fault feed (LO|FA|MO master view) --------------------------------------
     def fail_link(self, a: int, b: int) -> None:
@@ -138,9 +172,11 @@ class ServingCluster:
         self.faults = fabric.FaultMap.normalized(
             self.faults.dead_nodes,
             set(self.faults.dead_links) | {(a, b)})
+        self.sim.faults = self.faults   # sim flows detour the same map
 
     def clear_faults(self) -> None:
         self.faults = fabric.FaultMap()
+        self.sim.faults = self.faults
 
     # -- router -----------------------------------------------------------------
     def submit(self, req: Request) -> int:
@@ -151,14 +187,43 @@ class ServingCluster:
         return node.rank
 
     def step(self) -> None:
+        """One engine step on every node — one *logical window* of the
+        shared fabric timeline.  All nodes' decode TP flows enter at the
+        window start; the window stays open until the next step (or
+        stats), so a ``migrate()`` issued between steps lands in the same
+        window and contends with the decode traffic already in flight."""
+        self._close_window()
+        self._window_start = self.sim.now
+        self._window_open = True
         for node in self.nodes.values():
             node.engine.step()
+
+    def _close_window(self) -> None:
+        """Settle the open window: resolve every node's injected flows,
+        then advance the shared clock past both the contention-priced comm
+        and the modelled decode compute of the busiest node."""
+        if not self._window_open:
+            return
+        self._window_open = False
+        ws = self._window_start
+        end = ws
+        for node in self.nodes.values():
+            end = max(end, node.engine.settle_comm(ws))
+        busiest = max((len(n.engine.running) for n in self.nodes.values()),
+                      default=0)
+        end = max(end, ws + 2.0 * self.n_params * busiest / GPU_EFF_FLOPS)
+        self.sim.advance(end)
+        # the window's finishes are all accounted for: drop the settled
+        # flows so the long-lived timeline (and every route probe's copy
+        # of it) stays O(in-flight), not O(uptime)
+        self.sim.prune()
 
     def run_to_completion(self, max_steps: int = 10_000) -> None:
         steps = 0
         while self.in_flight and steps < max_steps:
             self.step()
             steps += 1
+        self._close_window()
 
     @property
     def in_flight(self) -> int:
@@ -180,13 +245,22 @@ class ServingCluster:
         raise KeyError(f"request {rid} is not running on any node "
                        "(pending/prefilling/finished requests don't migrate)")
 
-    def migrate(self, rid: int, dst_rank: int) -> MigrationReport:
+    def migrate(self, rid: int, dst_rank: int, *,
+                route_policy: str = "congestion") -> MigrationReport:
         """Live-migrate a running request's KV pages to ``dst_rank``.
 
         Decode resumes on the destination with bitwise-identical tokens;
         raises ``UnroutableError`` when the fault map separates the nodes,
         and leaves the request untouched on the source when the
         destination has no free slot/pages.
+
+        ``route_policy="congestion"`` (default) probes every candidate
+        route (the fault BFS machinery's loop-free detour family) against
+        the live traffic on the shared timeline and takes the one with the
+        least *simulated completion time* — on a quiet fabric that is the
+        minimal dimension-ordered path, but when decode collectives are
+        hammering the direct links a longer detour can genuinely win.
+        ``route_policy="hops"`` keeps the classic hop-count-minimal route.
         """
         src_node, req = self._find_running(rid)
         if dst_rank not in self.nodes:
@@ -199,8 +273,16 @@ class ServingCluster:
         state = src_node.lm.export_slot(old_slot)
         # route first: an unroutable fabric must fail before any state
         # moves (the request keeps decoding on the source)
-        sched = fabric.lower_p2p(self.torus, src_node.rank, dst_rank,
-                                 faults=self.faults)
+        if route_policy == "congestion":
+            route, _ = fabric.best_route(
+                self.sim, src_node.rank, dst_rank, state.nbytes,
+                faults=self.faults)
+            sched = fabric.lower_route(self.torus, route, faults=self.faults)
+        elif route_policy == "hops":
+            sched = fabric.lower_p2p(self.torus, src_node.rank, dst_rank,
+                                     faults=self.faults)
+        else:
+            raise ValueError(f"unknown route_policy {route_policy!r}")
         new_slot = dst_node.lm.import_slot(state)
         # only the live pages ride the wire (headroom is claimed fresh on
         # the destination) — the same byte count the bench gate prices
@@ -216,13 +298,16 @@ class ServingCluster:
         src_node.lm.free_slot(old_slot)
         req.slot = new_slot
         dst_node.engine.attach(req)
+        put = src_node.lm.endpoint.last_put_report or {}
         report = MigrationReport(
             rid=rid, src=src_node.rank, dst=dst_rank,
             n_pages=state.n_pages, nbytes=state.nbytes,
             hops=sched.max_hops,
             min_hops=self.torus.hop_distance(src_node.rank, dst_rank),
             modelled_s=modelled,
-            reprefill_s=reprefill_stall_s(self.n_params, req.pos))
+            reprefill_s=reprefill_stall_s(self.n_params, req.pos),
+            isolated_s=put.get("isolated_s", modelled),
+            route_policy=route_policy)
         self.migrations.append(report)
         return report
 
@@ -249,6 +334,12 @@ class ServingCluster:
 
     # -- reporting --------------------------------------------------------------
     def stats(self) -> dict:
+        """Cluster-wide report.  A pure read: the open fabric window (if
+        any) is left open, so a monitoring poll between ``step()`` and
+        ``migrate()`` cannot quietly settle the in-flight decode traffic
+        a contention-priced migration is about to contend with —
+        ``sim_tp_comm_s`` therefore reflects *settled* windows only
+        (``run_to_completion`` closes the last one)."""
         per_node = {r: dict(n.engine.stats(), load=n.load)
                     for r, n in self.nodes.items()}
         return {
@@ -257,11 +348,14 @@ class ServingCluster:
             "migrated_bytes": sum(m.nbytes for m in self.migrations),
             "migration_modelled_s": sum(m.modelled_s
                                         for m in self.migrations),
+            "migration_isolated_s": sum(m.isolated_s
+                                        for m in self.migrations),
             "reprefill_avoided_s": sum(m.reprefill_s
                                        for m in self.migrations),
             "rerouted_migrations": sum(m.rerouted for m in self.migrations),
             "faults": {"dead_nodes": sorted(self.faults.dead_nodes),
                        "dead_links": sorted(self.faults.dead_links)},
+            "fabric_sim_now_s": self.sim.now,
         }
 
 

@@ -123,7 +123,9 @@ class PagedLM:
                  pool_pages: int | None = None,
                  torus: Torus | None = None,
                  tp_axes: tuple[str, ...] | None = None,
-                 rank: int = 0, net: NetModel | None = None) -> None:
+                 rank: int = 0, net: NetModel | None = None,
+                 sim: fabric.FabricSim | None = None,
+                 cost_backend: str = "analytic") -> None:
         assert cfg.family in ("dense", "moe", "vlm")
         self.cfg = cfg
         self.params = params
@@ -146,7 +148,12 @@ class PagedLM:
                              f"{self.torus.dims}")
         self.net = net or NetModel()
         self.bytes_per_token = 2 * L * cfg.n_kv_heads * hd * 2
-        self.endpoint = RdmaEndpoint(self.torus, rank=rank, net=self.net)
+        # shared fabric timeline: a serving cluster passes ONE FabricSim so
+        # this node's migration PUTs and decode-step TP collectives contend
+        # with every other node's traffic on the same torus links
+        self.sim = sim
+        self.endpoint = RdmaEndpoint(self.torus, rank=rank, net=self.net,
+                                     sim=sim)
         self.allocator = PageAllocator(
             self.n_pages, page_tokens,
             bytes_per_token=self.bytes_per_token, endpoint=self.endpoint)
@@ -163,10 +170,15 @@ class PagedLM:
             self.tp_schedule = fabric.lower_all_reduce(self.torus,
                                                        self.tp_axes)
             ar_bytes = max_batch * cfg.d_model * jnp.dtype(cfg.dtype).itemsize
+            # per-decode-step TP wire bytes: one residual all-reduce per
+            # layer (the per-step traffic a shared sim injects as flows)
+            self.tp_step_bytes = L * ar_bytes
             self.predicted_tp_comm_s = L * fabric.estimate(
-                self.tp_schedule, ar_bytes, self.net).total_s
+                self.tp_schedule, ar_bytes, self.net,
+                backend=cost_backend).total_s
         else:
             self.tp_schedule = None
+            self.tp_step_bytes = 0
             self.predicted_tp_comm_s = 0.0
         self.slot_pages: dict[int, list[int]] = {}
         self._decode = jax.jit(self._decode_impl)
@@ -466,6 +478,12 @@ class Engine:
         self.prefill_chunks = 0
         self.decode_stall_s = 0.0   # non-decode work while a batch waited
         self._step_times: list[float] = []
+        # shared-timeline accounting (lm.sim attached): each decode step
+        # injects the node's TP collective traffic as flows; the timeline
+        # owner (the serving cluster) settles them per logical window
+        self.pending_comm_fids: list[int] = []
+        self.sim_tp_comm_s = 0.0    # settled, contention-priced TP comm
+        self.sim_comm_steps = 0
 
     @property
     def load(self) -> int:
@@ -554,6 +572,14 @@ class Engine:
             tokens[slot] = req.out_tokens[-1]
             active[slot] = not req.done
         nxt = self.lm.decode_batch(tokens, active)
+        if self.lm.sim is not None and self.lm.tp_schedule is not None:
+            # this step's TP collectives enter the shared timeline at the
+            # current window start; they are settled (and priced, WITH
+            # whatever traffic they contended against) by settle_comm
+            self.pending_comm_fids.extend(fabric.inject_schedule(
+                self.lm.sim, self.lm.tp_schedule, self.lm.tp_step_bytes,
+                start_s=self.lm.sim.now, granularity="phase"))
+            self.sim_comm_steps += 1
         self.steps += 1
         self._step_times.append(time.perf_counter() - t0)
         for slot, req in list(self.running.items()):
@@ -563,6 +589,20 @@ class Engine:
             if req.done:
                 self.lm.free_slot(slot)
                 self.finished.append(self.running.pop(slot))
+
+    def settle_comm(self, window_start: float) -> float:
+        """Resolve this window's injected TP flows against the shared
+        timeline; accrues their contention-priced wall time and returns
+        the window's comm end (``window_start`` when idle).  Called by
+        the timeline owner (the serving cluster) once per logical window."""
+        if not self.pending_comm_fids:
+            return window_start
+        sim = self.lm.sim
+        sim.run()
+        end = max(sim.finish_s(f) for f in self.pending_comm_fids)
+        self.pending_comm_fids = []
+        self.sim_tp_comm_s += max(end - window_start, 0.0)
+        return end
 
     def run_to_completion(self, max_steps: int = 10_000) -> None:
         steps = 0
@@ -589,4 +629,9 @@ class Engine:
             "chunked_prefill": self.chunked_prefill,
             "prefill_chunks": self.prefill_chunks,
             "decode_stall_s": self.decode_stall_s,
+            # shared-timeline contention pricing (0.0 without a sim): TP
+            # comm as actually experienced against concurrent traffic,
+            # vs predicted_tp_comm_s which prices a quiet fabric
+            "sim_tp_comm_s": self.sim_tp_comm_s,
+            "sim_comm_steps": self.sim_comm_steps,
         }

@@ -220,6 +220,38 @@ def bucket_hook_equivalence_checks(rng):
         check(f"bucketed grad hook == sequential RS, bitwise ({tag})")
 
 
+def sim_analytic_differential_checks():
+    """The two cost backends must agree on single-flow ring schedules:
+    every round's messages ride disjoint link directions, so the
+    event-driven sim (fabric/sim.py) and the closed-form model price the
+    exact same timeline.  10% is the acceptance bar; the assertion is the
+    differential that validates BOTH models."""
+    for tag, (shape, axes) in MESHES.items():
+        torus = Torus(shape)
+        scheds = {
+            "all-reduce": fabric.lower_all_reduce(torus, axes),
+            "reduce-scatter": fabric.lower_reduce_scatter(torus, axes),
+            "all-gather": fabric.lower_all_gather(torus, axes),
+        }
+        for name, sched in scheds.items():
+            for nbytes in (0, 4096, 1 << 20):
+                a = fabric.estimate(sched, nbytes).total_s
+                s = fabric.estimate(sched, nbytes, backend="sim").total_s
+                err = abs(s - a) / a if a else abs(s - a)
+                assert err <= 0.10, \
+                    f"{name} ({tag}, {nbytes} B): sim {s} vs analytic " \
+                    f"{a} — {err * 100:.1f}% > 10%"
+        check(f"sim backend == analytic on single-flow schedules ({tag})")
+    # multi-hop p2p unicast rides the same differential
+    t3 = Torus((2, 2, 2))
+    p2p = fabric.lower_p2p(t3, 0, t3.size - 1)
+    for nbytes in (64, 1 << 20):
+        a = fabric.estimate(p2p, nbytes).total_s
+        s = fabric.estimate(p2p, nbytes, backend="sim").total_s
+        assert abs(s - a) / a <= 0.10
+    check("sim backend == analytic on p2p unicast (3d)")
+
+
 def main() -> None:
     assert jax.device_count() == 8, jax.device_count()
     rng = np.random.default_rng(7)
@@ -229,6 +261,7 @@ def main() -> None:
     a2a_and_halo_checks(rng)
     fault_rewrite_checks(rng)
     bucket_hook_equivalence_checks(rng)
+    sim_analytic_differential_checks()
     print("ALL FABRIC CHECKS PASSED")
 
 

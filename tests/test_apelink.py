@@ -60,6 +60,92 @@ def test_truncation_detected():
         apelink.decode_stream(enc[:-3])
 
 
+# ---------------------------------------------------------------------------
+# resynchronisation after mid-stream corruption (what word stuffing buys)
+# ---------------------------------------------------------------------------
+
+# MAGIC-heavy payloads included: stuffing escapes are the interesting case
+_RESYNC_WORD = st.one_of(
+    st.sampled_from([int(apelink.MAGIC), 0, 1, 0xFFFFFFFF]),
+    st.integers(0, 2**32 - 1))
+_RESYNC_PACKETS = st.lists(
+    st.lists(_RESYNC_WORD, min_size=0, max_size=24), min_size=2, max_size=6)
+
+
+def _spans(packets):
+    """Wire [start, end) span of each encoded packet in the stream."""
+    spans, pos = [], 0
+    for i, p in enumerate(packets):
+        enc = apelink.encode_packet(np.array(p, np.uint32), dest=i % 256)
+        spans.append((pos, pos + enc.size))
+        pos += enc.size
+    return spans
+
+
+@hp.given(_RESYNC_PACKETS, st.data())
+def test_resync_recovers_packets_after_corruption(packets, data):
+    """Corrupt ONE wire word inside packet k (anywhere but its header —
+    the header is not CRC-protected, so corrupting it forges a valid
+    packet with a different dest): strict decoding must detect it, and
+    ``resync=True`` must recover every packet after the damage, with the
+    packets before it untouched."""
+    stream = np.concatenate(
+        [apelink.encode_packet(np.array(p, np.uint32), dest=i % 256)
+         for i, p in enumerate(packets)])
+    spans = _spans(packets)
+    k = data.draw(st.integers(0, len(packets) - 1), label="victim packet")
+    lo, hi = spans[k]
+    offsets = [o for o in range(lo, hi) if o != lo + 1]  # skip the header
+    pos = data.draw(st.sampled_from(offsets), label="corrupt position")
+    flip = data.draw(st.integers(1, 2**32 - 1), label="xor mask")
+    corrupted = stream.copy()
+    corrupted[pos] ^= np.uint32(flip)
+
+    with pytest.raises(ValueError):
+        apelink.decode_stream(corrupted)          # strict mode detects it
+
+    decoded = apelink.decode_stream(corrupted, resync=True)
+    want = [(i % 256, np.array(p, np.uint32))
+            for i, p in enumerate(packets)]
+    # prefix: packets before the victim decode exactly
+    assert len(decoded) >= k
+    for (d, got), (wd, wp) in zip(decoded[:k], want[:k]):
+        assert d == wd
+        np.testing.assert_array_equal(got, wp)
+    # suffix: every packet after the victim is recovered
+    tail = want[k + 1:]
+    assert len(decoded) >= k + len(tail)
+    for (d, got), (wd, wp) in zip(decoded[len(decoded) - len(tail):], tail):
+        assert d == wd
+        np.testing.assert_array_equal(got, wp)
+
+
+@hp.given(_RESYNC_PACKETS)
+def test_resync_on_clean_stream_is_identity(packets):
+    stream = np.concatenate(
+        [apelink.encode_packet(np.array(p, np.uint32), dest=i % 256)
+         for i, p in enumerate(packets)])
+    strict = apelink.decode_stream(stream)
+    lenient = apelink.decode_stream(stream, resync=True)
+    assert len(strict) == len(lenient) == len(packets)
+    for (d1, p1), (d2, p2) in zip(strict, lenient):
+        assert d1 == d2
+        np.testing.assert_array_equal(p1, p2)
+
+
+def test_resync_recovers_boundary_after_magic_heavy_corruption():
+    """Deterministic spot-check: a corrupted stuffed-MAGIC escape in a
+    MAGIC-saturated payload must not desynchronise the following packet."""
+    p0 = np.full(16, apelink.MAGIC, dtype=np.uint32)
+    p1 = np.arange(10, dtype=np.uint32)
+    stream = np.concatenate([apelink.encode_packet(p0, dest=3),
+                             apelink.encode_packet(p1, dest=4)])
+    corrupted = stream.copy()
+    corrupted[4] ^= np.uint32(0x5A5A5A5A)   # break an escape pair
+    decoded = apelink.decode_stream(corrupted, resync=True)
+    assert (4, p1.tolist()) in [(d, p.tolist()) for d, p in decoded]
+
+
 def test_efficiency_matches_paper():
     # paper §2.3: total efficiency 0.784
     assert apelink.protocol_efficiency() == pytest.approx(0.784, abs=1e-3)

@@ -206,6 +206,36 @@ def test_p2p_dimension_ordered_route_and_price():
     assert fabric.estimate(fabric.lower_p2p(t, 3, 3), n).total_s == 0.0
 
 
+def test_message_time_zero_bytes_prices_header_latency_only():
+    """A zero-byte transfer (pure sync step) pays injection + reception +
+    per-hop transits, and NOT a phantom 1-byte payload."""
+    from repro.core.apelink import NetModel
+    net = NetModel()
+    for hops in (1, 3, 7):
+        assert fabric.message_time(0, net, hops=hops) == pytest.approx(
+            net.t_inject + net.t_receive + hops * net.t_hop, rel=1e-12)
+    # strictly below any payload-carrying message, monotone at the origin
+    assert fabric.message_time(0, net) < fabric.message_time(1, net)
+    # fractional sub-byte payloads truncate to the header-only price, not
+    # up to a phantom byte
+    assert fabric.message_time(0.25, net) == fabric.message_time(0, net)
+
+
+def test_lower_route_explicit_path():
+    t = Torus((4, 4))
+    route = (0, 4, 5, 1)                      # a deliberate detour 0 -> 1
+    s = fabric.lower_route(t, route)
+    assert s.route == route and s.max_hops == 3
+    assert fabric.estimate(s, 1 << 20).total_s == pytest.approx(
+        fabric.message_time(1 << 20, hops=3))
+    with pytest.raises(ValueError):
+        fabric.lower_route(t, (0, 5))         # not a first-neighbour link
+    with pytest.raises(fabric.UnroutableError):
+        fabric.lower_route(t, (0, 1),
+                           faults=fabric.FaultMap.normalized(
+                               links=[(0, 1)]))
+
+
 def test_p2p_fault_rewrite_detours_and_costs_more():
     t = Torus((4,))
     s = fabric.lower_p2p(t, 0, 1)

@@ -1,0 +1,373 @@
+"""FabricSim — the event-driven link-level timeline (core/fabric/sim).
+
+Three contracts:
+  * differential: ``backend="sim"`` == the analytic estimate on
+    single-flow schedules (exact, not just within the 10% bar);
+  * contention: flows sharing a link direction serialize, disjoint ones
+    don't, credit backpressure propagates upstream, host-IF resources
+    FIFO;
+  * routing: candidate enumeration + probe-by-simulated-completion picks
+    the detour exactly when the direct link is congested.
+"""
+import copy
+
+import pytest
+
+from repro.core import fabric
+from repro.core.apelink import NetModel
+from repro.core.fabric.sim import FabricSim
+from repro.core.rdma import RdmaEndpoint
+from repro.core.topology import Torus
+
+
+NET = NetModel()
+
+
+# ---------------------------------------------------------------------------
+# single-flow agreement with the analytic model
+# ---------------------------------------------------------------------------
+
+def test_single_flow_matches_message_time_one_hop():
+    for nbytes in (0, 1, 4096, 1 << 20):
+        s = FabricSim(Torus((8,)))
+        fid = s.inject(0, 1, nbytes)
+        assert s.finish_s(fid) == pytest.approx(
+            fabric.message_time(nbytes, NET, hops=1), rel=1e-12)
+
+
+def test_single_flow_multi_hop_within_tolerance():
+    t = Torus((4, 4, 4))
+    dst = t.rank((2, 2, 2))
+    for nbytes in (64, 1 << 20):
+        s = FabricSim(t)
+        fid = s.inject(0, dst, nbytes)
+        analytic = fabric.message_time(nbytes, NET, hops=6)
+        # packet pipelining adds (hops-1) * pkt/bw of store-and-forward
+        # fill — a few us, inside the differential bar
+        assert s.finish_s(fid) == pytest.approx(analytic, rel=0.10)
+        assert s.finish_s(fid) >= analytic * (1 - 1e-12)
+
+
+def test_zero_byte_flow_prices_header_latency_only():
+    s = FabricSim(Torus((4, 4)))
+    fid = s.inject(0, 5, 0)         # 2 hops, no payload
+    assert s.finish_s(fid) == pytest.approx(
+        NET.t_inject + NET.t_receive + 2 * NET.t_hop, rel=1e-12)
+
+
+@pytest.mark.parametrize("dims,axes", [((8,), ("x",)),
+                                       ((2, 4), ("a", "b")),
+                                       ((2, 2, 2), ("u", "v", "w"))])
+@pytest.mark.parametrize("lower_name", ["lower_all_reduce",
+                                        "lower_reduce_scatter",
+                                        "lower_all_gather"])
+def test_sim_backend_matches_analytic_on_ring_schedules(dims, axes,
+                                                        lower_name):
+    """The acceptance differential: single-flow 1D/2D/3D ring schedules
+    agree across backends within 10% (they agree exactly — every round's
+    messages ride disjoint link directions)."""
+    t = Torus(dims)
+    sched = getattr(fabric, lower_name)(t, axes)
+    for nbytes in (0, 4096, 1 << 20):
+        a = fabric.estimate(sched, nbytes)
+        s = fabric.estimate(sched, nbytes, backend="sim")
+        assert s.total_s == pytest.approx(a.total_s, rel=0.10)
+        assert s.total_s == pytest.approx(a.total_s, rel=1e-9)  # exact
+        assert s.rounds == a.rounds and s.max_hops == a.max_hops
+        for ps, pa in zip(s.phase_s, a.phase_s):
+            assert ps == pytest.approx(pa, rel=1e-9)
+
+
+def test_sim_backend_matches_analytic_on_p2p():
+    t = Torus((4, 4, 4))
+    sched = fabric.lower_p2p(t, 0, t.rank((2, 2, 2)))
+    for nbytes in (64, 1 << 20):
+        a = fabric.estimate(sched, nbytes).total_s
+        s = fabric.estimate(sched, nbytes, backend="sim").total_s
+        assert s == pytest.approx(a, rel=0.10)
+    # degenerate self-route prices zero on both backends
+    self_sched = fabric.lower_p2p(t, 3, 3)
+    assert fabric.estimate(self_sched, 1 << 20,
+                           backend="sim").total_s == 0.0
+
+
+def test_sim_backend_detoured_schedule_costs_more():
+    t = Torus((8,))
+    clean = fabric.lower_all_reduce(t, ("x",))
+    detoured = fabric.rewrite(clean,
+                              fabric.FaultMap.normalized(links=[(2, 3)]))
+    n = 1 << 20
+    assert fabric.estimate(detoured, n, backend="sim").total_s \
+        > fabric.estimate(clean, n, backend="sim").total_s
+
+
+def test_unknown_backend_rejected():
+    sched = fabric.lower_all_reduce(Torus((4,)), ("x",))
+    with pytest.raises(ValueError, match="backend"):
+        fabric.estimate(sched, 1024, backend="simulated")
+
+
+def test_estimate_overlapped_accepts_backend():
+    sched = fabric.lower_reduce_scatter(Torus((8,)), ("x",))
+    plan = [1 << 20] * 4
+    a = fabric.estimate_overlapped(sched, plan, 1e-3)
+    s = fabric.estimate_overlapped(sched, plan, 1e-3, backend="sim")
+    assert s.total_s == pytest.approx(a.total_s, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# contention mechanics
+# ---------------------------------------------------------------------------
+
+def test_shared_link_serializes_disjoint_links_dont():
+    n = 4 << 20
+    iso = FabricSim(Torus((8,)))
+    t_iso = iso.finish_s(iso.inject(0, 1, n))
+    shared = FabricSim(Torus((8,)))
+    fids = [shared.inject(0, d, n) for d in (1, 2)]   # both cross (0, 1)
+    t_shared = max(shared.finish_s(f) for f in fids)
+    assert t_shared > 1.8 * t_iso                     # ~2x serialization
+    disjoint = FabricSim(Torus((8,)))
+    fids = [disjoint.inject(0, 1, n), disjoint.inject(2, 3, n)]
+    t_disj = max(disjoint.finish_s(f) for f in fids)
+    assert t_disj == pytest.approx(t_iso, rel=1e-6)   # full parallelism
+
+
+def test_fair_interleave_both_flows_slowed():
+    """Concurrent flows round-robin at packet granularity: BOTH see ~2x,
+    not FIFO-whole-flow (one unharmed, one doubled)."""
+    n = 4 << 20
+    iso = FabricSim(Torus((8,)))
+    t_iso = iso.finish_s(iso.inject(0, 1, n))
+    s = FabricSim(Torus((8,)))
+    a, b = s.inject(0, 1, n), s.inject(0, 1, n)
+    for f in (a, b):
+        assert s.finish_s(f) > 1.7 * t_iso
+
+
+def test_opposite_ring_directions_do_not_contend():
+    """Dual-DMA: the two directions of a link are distinct channels."""
+    n = 4 << 20
+    iso = FabricSim(Torus((8,)))
+    t_iso = iso.finish_s(iso.inject(0, 1, n))
+    s = FabricSim(Torus((8,)))
+    fwd, bwd = s.inject(0, 1, n), s.inject(1, 0, n)
+    assert max(s.finish_s(fwd), s.finish_s(bwd)) \
+        == pytest.approx(t_iso, rel=1e-6)
+
+
+def test_two_ring_dual_directions_ride_parallel_cables():
+    """On a 2-ring the +1/-1 transfers join the SAME rank pair but ride
+    the two physical cables — the channel hint keeps them concurrent."""
+    n = 4 << 20
+    iso = FabricSim(Torus((2,)))
+    t_iso = iso.finish_s(iso.inject(0, 1, n, channel=0))
+    s = FabricSim(Torus((2,)))
+    c0, c1 = s.inject(0, 1, n, channel=0), s.inject(0, 1, n, channel=1)
+    assert max(s.finish_s(c0), s.finish_s(c1)) \
+        == pytest.approx(t_iso, rel=1e-6)
+    # same channel: genuinely shared cable
+    s2 = FabricSim(Torus((2,)))
+    d0, d1 = s2.inject(0, 1, n, channel=0), s2.inject(0, 1, n, channel=0)
+    assert max(s2.finish_s(d0), s2.finish_s(d1)) > 1.8 * t_iso
+
+
+def test_credit_backpressure_propagates_upstream():
+    """A merge bottleneck at (1, 2) fills node 1's buffers; the credit
+    window then throttles flow A on the (0, 1) link even though nothing
+    else uses (0, 1)."""
+    n = 4 << 20
+    iso = FabricSim(Torus((8,)))
+    t_iso = iso.finish_s(iso.inject(0, 2, n))
+    iso1 = FabricSim(Torus((8,)))
+    t_iso1 = iso1.finish_s(iso1.inject(1, 2, n))
+    s = FabricSim(Torus((8,)))
+    a = s.inject(0, 2, n)            # 0 -> 1 -> 2
+    b = s.inject(1, 2, n)            # merges at link (1, 2)
+    assert s.finish_s(a) > 1.5 * t_iso
+    assert s.finish_s(b) > 1.5 * t_iso1              # both flows slowed
+
+
+def test_credit_window_bounds_in_flight_bytes():
+    """With a one-packet credit window the pipeline still flows, but a
+    stalled consumer-side link visibly stretches a multi-hop flow vs an
+    uncongested one (store-and-forward backpressure)."""
+    n = 1 << 20
+    wide = FabricSim(Torus((8,)), credit_bytes=1 << 20)
+    t_wide = wide.finish_s(wide.inject(0, 4, n))
+    narrow = FabricSim(Torus((8,)), credit_bytes=4096, packet_bytes=4096)
+    t_narrow = narrow.finish_s(narrow.inject(0, 4, n))
+    assert t_narrow >= t_wide          # less credit can never be faster
+
+
+def test_occupy_resource_fifo():
+    s = FabricSim(Torus((4,)))
+    a = s.occupy(("hostif", 0), 1e-3)
+    b = s.occupy(("hostif", 0), 1e-3)
+    c = s.occupy(("hostif", 1), 1e-3)   # different card: parallel
+    assert s.finish_s(a) == pytest.approx(1e-3)
+    assert s.finish_s(b) == pytest.approx(2e-3)
+    assert s.finish_s(c) == pytest.approx(1e-3)
+
+
+def test_dependencies_chain_flows():
+    s = FabricSim(Torus((8,)))
+    a = s.inject(0, 1, 1 << 20)
+    b = s.inject(2, 3, 1 << 20, after=(a,))   # disjoint links, dep-ordered
+    t_a, t_b = s.finish_s(a), s.finish_s(b)
+    assert t_b > t_a
+    assert t_b == pytest.approx(
+        t_a + fabric.message_time(1 << 20, NET, hops=1), rel=1e-9)
+
+
+def test_probe_route_does_not_mutate_timeline():
+    s = FabricSim(Torus((4, 4)))
+    bg = s.inject(0, 1, 8 << 20)
+    before = copy.deepcopy(s.link_stats())
+    t = s.probe_route((0, 1), 1 << 20)
+    assert t > 0
+    assert s.link_stats() == before
+    assert s.finish_s(bg) > 0          # background still completes
+
+
+def test_prune_drops_settled_flows_keeps_pending():
+    s = FabricSim(Torus((8,)))
+    done = s.inject(0, 1, 4096)
+    s.finish_s(done)                   # settled
+    pending = s.inject(2, 3, 4096, start_s=s.now + 1.0)
+    assert s.prune() == 1
+    with pytest.raises(KeyError):
+        s.finish_s(done)               # pruned ids are gone
+    assert s.finish_s(pending) > 1.0   # pending flow unaffected
+    assert s.prune() == 1              # now settled too
+
+
+def test_clock_advance_monotone():
+    s = FabricSim(Torus((4,)))
+    assert s.now == 0.0
+    s.advance(1.5)
+    assert s.now == 1.5
+    s.advance(1.0)                     # never backwards
+    assert s.now == 1.5
+    fid = s.inject(0, 1, 4096)         # injected at the frontier
+    assert s.finish_s(fid) > 1.5
+
+
+def test_inject_validates_route_and_faults():
+    t = Torus((4,))
+    s = FabricSim(t)
+    with pytest.raises(ValueError):
+        s.inject(0, 2, 1024, route=(0, 1))      # route doesn't reach dst
+    dead = FabricSim(t, faults=fabric.FaultMap.normalized(
+        links=[(0, 1), (3, 0)]))
+    with pytest.raises(fabric.UnroutableError):
+        dead.inject(0, 2, 1024)                 # rank 0 partitioned off
+
+
+# ---------------------------------------------------------------------------
+# congestion-aware route selection
+# ---------------------------------------------------------------------------
+
+def test_candidate_routes_cover_detour_family():
+    t = Torus((4, 4))
+    routes = fabric.candidate_routes(t, 0, 5)
+    assert all(r[0] == 0 and r[-1] == 5 for r in routes)
+    assert len(routes[0]) - 1 == t.hop_distance(0, 5)   # minimal first
+    assert len(routes) >= 3                              # real alternatives
+    for r in routes:
+        assert len(set(r)) == len(r)                     # loop-free
+    with pytest.raises(fabric.UnroutableError):
+        fabric.candidate_routes(
+            Torus((2,)), 0, 1,
+            fabric.FaultMap.normalized(links=[(0, 1)]))
+
+
+def test_best_route_prefers_minimal_on_quiet_fabric():
+    t = Torus((4, 4))
+    s = FabricSim(t)
+    route, _ = fabric.best_route(s, 0, 1, 1 << 20)
+    assert len(route) - 1 == 1
+
+
+def test_best_route_detours_around_congestion():
+    t = Torus((4, 4))
+    s = FabricSim(t)
+    s.inject(0, 1, 64 << 20)           # hammer the direct link
+    direct_t = s.probe_route(tuple(t.route(0, 1)), 4 << 20)
+    route, best_t = fabric.best_route(s, 0, 1, 4 << 20)
+    assert len(route) - 1 > 1          # took a detour
+    assert best_t < direct_t
+
+
+def test_best_route_respects_faults():
+    t = Torus((4,))
+    s = FabricSim(t)
+    faults = fabric.FaultMap.normalized(links=[(0, 1)])
+    route, _ = fabric.best_route(s, 0, 1, 1 << 20, faults=faults)
+    assert route == (0, 3, 2, 1)       # the only surviving path
+
+
+# ---------------------------------------------------------------------------
+# RDMA endpoint as a timeline client
+# ---------------------------------------------------------------------------
+
+def test_put_pages_quiet_sim_close_to_isolated():
+    t = Torus((4, 4))
+    sim = FabricSim(t)
+    ep = RdmaEndpoint(t, 0, sim=sim)
+    region = ep.register(64 << 10)
+    total = ep.put_pages(5, region, list(range(4)), page_nbytes=16 << 10)
+    rep = ep.last_put_report
+    assert rep["total_s"] == total
+    # a quiet fabric prices within packet-pipelining slack of isolated
+    assert total == pytest.approx(rep["isolated_s"], rel=0.05)
+
+
+def test_put_pages_contended_slower_than_isolated():
+    t = Torus((4, 4))
+    sim = FabricSim(t)
+    # saturate the route links first
+    sim.inject(0, 1, 64 << 20)
+    sim.inject(1, 2, 64 << 20)
+    ep = RdmaEndpoint(t, 0, sim=sim)
+    region = ep.register(8 << 20)
+    total = ep.put_pages(2, region, list(range(8)), page_nbytes=1 << 20)
+    rep = ep.last_put_report
+    assert total > 1.5 * rep["isolated_s"]
+
+
+def test_put_pages_without_sim_unchanged_closed_form():
+    t = Torus((4, 4))
+    ep = RdmaEndpoint(t, 0)
+    region = ep.register(64 << 10)
+    total = ep.put_pages(5, region, list(range(4)), page_nbytes=16 << 10)
+    assert total == ep.last_put_report["isolated_s"]
+
+
+def test_get_time_sim_matches_closed_form_on_quiet_fabric():
+    t = Torus((4, 4))
+    plain = RdmaEndpoint(t, 0)
+    r1 = plain.register(1 << 20)
+    closed = plain.get_time(3, 1 << 20, r1)
+    simmed = RdmaEndpoint(t, 0, sim=FabricSim(t))
+    r2 = simmed.register(1 << 20)
+    assert simmed.get_time(3, 1 << 20, r2) == pytest.approx(closed,
+                                                            rel=0.05)
+
+
+def test_put_queues_behind_busy_host_interface():
+    """A PUT issued while the card's host interface is already draining
+    another operation queues its DMA behind it — the host-IF is a shared
+    FIFO resource on the timeline, not a free closed-form term."""
+    t = Torus((8,))
+    sim = FabricSim(t)
+    ep = RdmaEndpoint(t, 0, sim=sim)
+    region = ep.register(8 << 20)
+    busy_s = 5e-3
+    sim.occupy(("hostif", 0), busy_s)       # e.g. another slot's export
+    total = ep.put_pages(1, region, list(range(8)), page_nbytes=1 << 20)
+    rep = ep.last_put_report
+    assert total > rep["isolated_s"]
+    # DMA waits for the busy host-IF: total = busy window + DMA + wire
+    assert total == pytest.approx(busy_s + rep["dma_s"] + rep["wire_s"],
+                                  rel=0.05)

@@ -257,6 +257,104 @@ def test_pagedlm_accepts_any_torus_rank_dims():
                 rank=5)
 
 
+# ---------------------------------------------------------------------------
+# shared fabric timeline: contention + congestion-aware migration routing
+# ---------------------------------------------------------------------------
+
+def _slow_net():
+    """A deliberately slow link so the reduced test model's tiny payloads
+    become byte-dominated — contention then shows at test scale exactly
+    like 7B-scale payloads do on the real link rate."""
+    from repro.core import hw
+    from repro.core.apelink import NetModel
+    link = hw.ApenetLinkSpec("slow-test", lanes=1, lane_gbps=0.01,
+                             encoding_efficiency=0.8)
+    return NetModel(link=link)
+
+
+# fine packets: the reduced model's KB-scale payloads must span many
+# packets for link sharing (round-robin per packet) to cost bandwidth
+_SLOW_SIM_KW = dict(credit_bytes=40e3, packet_bytes=256)
+
+
+def test_migration_contends_with_live_decode(dense_model, rng):
+    """A migrate() issued while the nodes' decode TP collectives are in
+    flight on the shared timeline must be priced ABOVE the sum-of-
+    isolated closed form — and tokens must stay bitwise identical."""
+    cfg, params = dense_model
+    prompt = rng.integers(0, cfg.vocab, size=(9,)).astype(np.int32)
+    baseline = _decode_alone(cfg, params, prompt, max_new=8)
+
+    cl = _cluster(cfg, params, tp_axes=None, net=_slow_net(),
+                  sim_kw=_SLOW_SIM_KW)
+    cl.submit(Request(rid=7, prompt=prompt, max_new_tokens=8))
+    for _ in range(4):
+        cl.step()                        # window stays open: flows pending
+    rep = cl.migrate(7, 1)
+    assert rep.isolated_s > 0
+    assert rep.modelled_s > rep.isolated_s * 1.01, \
+        "migration saw no contention from the live decode flows"
+    assert rep.contention_slowdown > 1.01
+    cl.run_to_completion()
+    assert cl.finished[0].out_tokens == baseline
+    st = cl.stats()
+    assert st["nodes"][0]["sim_tp_comm_s"] > 0
+    assert st["migration_isolated_s"] < st["migration_modelled_s"]
+    assert st["fabric_sim_now_s"] > 0
+
+
+def test_migration_quiet_fabric_prices_isolated(dense_model, rng):
+    """With no decode traffic on the timeline (tp_axes=()) the shared-sim
+    price collapses to the closed-form sum-of-isolated one."""
+    cfg, params = dense_model
+    prompt = rng.integers(0, cfg.vocab, size=(9,)).astype(np.int32)
+    cl = _cluster(cfg, params)           # tp_axes=() default: no TP flows
+    cl.submit(Request(rid=1, prompt=prompt, max_new_tokens=6))
+    for _ in range(3):
+        cl.step()
+    rep = cl.migrate(1, 1)
+    assert rep.modelled_s == pytest.approx(rep.isolated_s, rel=0.05)
+    assert not rep.rerouted              # quiet fabric: minimal route
+
+
+def test_congestion_aware_migration_beats_hop_count(dense_model, rng):
+    """With a bulk transfer hammering the direct link, the congestion-
+    aware route probe must pick a genuine detour AND price below the
+    hop-minimal route — while decode equivalence still holds."""
+    cfg, params = dense_model
+    prompt = rng.integers(0, cfg.vocab, size=(9,)).astype(np.int32)
+    baseline = _decode_alone(cfg, params, prompt, max_new=6)
+
+    def run(policy):
+        cl = _cluster(cfg, params, net=_slow_net(), sim_kw=_SLOW_SIM_KW)
+        cl.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+        for _ in range(2):
+            cl.step()
+        cl.sim.inject(0, 1, 200_000)     # bulk traffic on the direct link
+        rep = cl.migrate(0, 1, route_policy=policy)
+        return cl, rep
+
+    cl_cong, rep_cong = run("congestion")
+    _, rep_hops = run("hops")
+    assert rep_hops.hops == 1            # hop-count routing takes the hit
+    assert rep_cong.hops > 1             # the probe detoured
+    assert rep_cong.rerouted and rep_cong.route_policy == "congestion"
+    assert rep_cong.modelled_s < rep_hops.modelled_s
+    cl_cong.run_to_completion()
+    assert cl_cong.finished[0].out_tokens == baseline
+
+
+def test_migrate_rejects_unknown_route_policy(dense_model, rng):
+    cfg, params = dense_model
+    cl = _cluster(cfg, params)
+    prompt = rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32)
+    cl.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+    for _ in range(2):
+        cl.step()
+    with pytest.raises(ValueError, match="route_policy"):
+        cl.migrate(0, 1, route_policy="shortest")
+
+
 def test_stall_accounting_only_counts_real_work(dense_model, rng):
     """A step that neither admitted nor prefilled must not accrue
     decode_stall_s (the _admit walk is not a stall)."""

@@ -61,6 +61,60 @@ def test_stats_and_correctness_property(vpages):
     assert 0.0 <= t.stats.hit_rate <= 1.0
 
 
+def test_rdma_deregister_invalidates_region_tlb_entries():
+    """After ``RdmaEndpoint.deregister`` no translation of the region may
+    hit — a stale entry would hand out a mapping for unpinned memory."""
+    from repro.core.rdma import RdmaEndpoint
+    from repro.core.topology import Torus
+
+    ep = RdmaEndpoint(Torus((4,)), rank=0)
+    region = ep.register(3 * PAGE_BYTES + 100)     # partial last page too
+    ep.translate_region(region)                    # populate the TLB
+    for off in range(0, region.nbytes, PAGE_BYTES):
+        _, c = ep.tlb.translate(region.vaddr + off)
+        assert c == pytest.approx(T_HW_HIT)        # hot before deregister
+    ep.deregister(region)
+    for off in range(0, region.nbytes, PAGE_BYTES):
+        _, c = ep.tlb.translate(region.vaddr + off)
+        assert c > T_HW_HIT, f"stale TLB hit at offset {off} after " \
+                             "deregister"
+
+
+def test_rdma_deregister_sweeps_zero_byte_region_page():
+    """A zero-byte region still owns (and translates) its first page —
+    the regression: deregister swept ``range(0, 0)`` and left that
+    translation live."""
+    from repro.core.rdma import RdmaEndpoint
+    from repro.core.topology import Torus
+
+    ep = RdmaEndpoint(Torus((4,)), rank=0)
+    region = ep.register(0)
+    ep.translate_region(region)                    # walks page 0
+    _, c = ep.tlb.translate(region.vaddr)
+    assert c == pytest.approx(T_HW_HIT)
+    ep.deregister(region)
+    _, c = ep.tlb.translate(region.vaddr)
+    assert c > T_HW_HIT
+
+
+def test_rdma_zero_byte_region_owns_its_page_exclusively():
+    """A zero-byte region must still RESERVE its page: were it to alias
+    the next registration's vaddr, deregistering it would shoot down a
+    live region's translations."""
+    from repro.core.rdma import RdmaEndpoint
+    from repro.core.topology import Torus
+
+    ep = RdmaEndpoint(Torus((4,)), rank=0)
+    r0 = ep.register(0)
+    r1 = ep.register(PAGE_BYTES)
+    assert r1.vaddr >= r0.vaddr + PAGE_BYTES       # no address aliasing
+    ep.translate_region(r1)                        # r1's page is hot
+    ep.deregister(r0)                              # must not touch r1
+    _, c = ep.tlb.translate(r1.vaddr)
+    assert c == pytest.approx(T_HW_HIT), \
+        "deregistering a zero-byte region invalidated a live region"
+
+
 def test_fig2_bandwidth_gain_up_to_60_percent():
     """Paper §2.2: 'A speedup of up to 60% in bandwidth ... has been
     measured' — hot TLB vs all-miss (Nios II on every page)."""
