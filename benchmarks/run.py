@@ -28,8 +28,8 @@ import sys
 import time
 
 MODULES = ["apelink_eff", "dma_overlap", "tlb", "latency", "bandwidth",
-           "fabric_cost", "overlap", "migration", "contention", "lofamo",
-           "nextgen", "roofline"]
+           "fabric_cost", "overlap", "migration", "contention", "qos",
+           "lofamo", "nextgen", "roofline"]
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -45,7 +45,7 @@ else
     HYPOTHESIS_PROFILE=ci python -m pytest -x -q -m "not slow"
     echo "[ci] benchmarks (quick set)"
     python -m benchmarks.run overlap dma_overlap fabric_cost migration \
-        contention
+        contention qos
 fi
 
 echo "[ci] bench regression gate"

@@ -15,6 +15,11 @@ One IR, four consumers:
 ``core.collectives`` wraps the executor behind the familiar per-shard
 collective API; everything else (trainer, serving engine, benchmarks)
 consumes schedules directly.
+
+``fabric.qos`` adds traffic classes on top of the sim: every link of
+``FabricSim`` carries per-class virtual channels drained by a
+class-weighted arbiter with partitioned credits, so latency-critical
+DECODE flows are protected from BULK migrations sharing their links.
 """
 from repro.core.fabric.cost import (BACKENDS, CostEstimate, OverlapEstimate,
                                     algorithmic_bandwidth, estimate,
@@ -35,9 +40,12 @@ from repro.core.fabric.lower import (axis_fault_penalty, live_ring, lower,
 from repro.core.fabric.schedule import (A2A, AG, AR, HALO, P2P, RS, Bucket,
                                         BucketPlan, CollectiveSchedule,
                                         FaultMap, Phase, Step, Transfer)
+from repro.core.fabric.qos import (DEFAULT_CREDIT_FRAC, DEFAULT_WEIGHTS,
+                                   SINGLE_CLASS, QosPolicy, TrafficClass)
 from repro.core.fabric.sim import (FabricSim, FlowResult, best_route,
                                    candidate_routes, inject_schedule,
-                                   simulate_schedule)
+                                   simulate_schedule, stripe_counts,
+                                   striped_routes)
 
 __all__ = [
     "A2A", "AG", "AR", "HALO", "P2P", "RS",
@@ -53,5 +61,8 @@ __all__ = [
     "lower_all_reduce", "lower_all_to_all", "lower_halo_exchange",
     "lower_p2p", "lower_reduce_scatter", "lower_route", "plan_buckets",
     "FabricSim", "FlowResult", "best_route", "candidate_routes",
-    "inject_schedule", "simulate_schedule",
+    "inject_schedule", "simulate_schedule", "stripe_counts",
+    "striped_routes",
+    "DEFAULT_CREDIT_FRAC", "DEFAULT_WEIGHTS", "SINGLE_CLASS", "QosPolicy",
+    "TrafficClass",
 ]

@@ -51,7 +51,7 @@ BACKENDS = ("analytic", "sim")
 
 def estimate(schedule: CollectiveSchedule, nbytes: int,
              net: NetModel | None = None, *, backend: str = "analytic",
-             **endpoint_kw) -> CostEstimate:
+             cls=None, **endpoint_kw) -> CostEstimate:
     """Predicted completion time for the collective on an ``nbytes`` input
     (bytes of the per-rank input buffer, matching the transfers' ``frac``
     base).
@@ -64,12 +64,18 @@ def estimate(schedule: CollectiveSchedule, nbytes: int,
     transfers that share a link direction contend.  On single-flow
     schedules the two must agree (the ``tests/fabric_checks.py``
     differential); that agreement is the validation of both models.
+
+    ``cls`` tags the traffic class (``fabric.qos.TrafficClass``) of the
+    sim backend's flows; the analytic model ignores it — class weights
+    only matter under contention, which the closed form never prices.
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown cost backend {backend!r}; "
                          f"expected one of {BACKENDS}")
     if backend == "sim":
         from repro.core.fabric import sim as _sim
+        if cls is not None:
+            endpoint_kw["cls"] = cls
         return _sim.simulate_schedule(schedule, nbytes, net, **endpoint_kw)
     net = net or NetModel()
     phase_s = []
@@ -142,7 +148,7 @@ def estimate_overlapped(schedule: CollectiveSchedule,
                         queue_depth: int = 2,
                         issue_gap_s: float = 0.85e-6,
                         backend: str = "analytic",
-                        **endpoint_kw) -> OverlapEstimate:
+                        cls=None, **endpoint_kw) -> OverlapEstimate:
     """Price a bucketed, compute-overlapped execution of ``schedule``.
 
     ``buckets`` is a ``BucketPlan`` (or raw per-bucket byte counts) in
@@ -174,7 +180,7 @@ def estimate_overlapped(schedule: CollectiveSchedule,
         if len(comp) != nb:
             raise ValueError(
                 f"compute trace has {len(comp)} segments for {nb} buckets")
-    comm = tuple(estimate(schedule, b, net, backend=backend,
+    comm = tuple(estimate(schedule, b, net, backend=backend, cls=cls,
                           **endpoint_kw).total_s
                  for b in nbytes)
     compute_total = sum(comp)
@@ -196,7 +202,7 @@ def estimate_overlapped(schedule: CollectiveSchedule,
     busy = sum(comm) + sum(gaps)
     hidden = max(0.0, busy - exposed)
     seq = (compute_total + issue_gap_s
-           + estimate(schedule, sum(nbytes), net, backend=backend,
+           + estimate(schedule, sum(nbytes), net, backend=backend, cls=cls,
                       **endpoint_kw).total_s
            if nbytes else compute_total)
     return OverlapEstimate(

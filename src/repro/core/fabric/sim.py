@@ -9,16 +9,23 @@ routing over links that many in-flight packets compete for.  The companion
 works arXiv:1102.3796 and arXiv:1307.8276 measure exactly that regime:
 aggregate traffic on shared links.  ``FabricSim`` closes the gap:
 
-  * every directed first-neighbour link is a FIFO resource at the APElink
-    sustained payload bandwidth; packets of concurrent flows interleave at
-    packet granularity (a flow keeps ONE packet queued per link head, so
-    the FIFO round-robins flows like the router's VC arbiter);
+  * every directed first-neighbour link carries one **virtual channel per
+    traffic class** (``fabric.qos.TrafficClass``) at the APElink sustained
+    payload bandwidth; a weighted arbiter (start-time-fair virtual-time
+    scheduling — the router's class-weighted round-robin) drains the
+    channels, so under contention each backlogged class holds a
+    weight-proportional share of the link and no class can be starved.
+    The default ``QosPolicy(single_class=True)`` collapses this to ONE
+    FIFO channel — bitwise the pre-QoS simulator;
   * **credit-based flow control**: each directed link's downstream buffer
     holds ``credit_bytes`` (default: ``apelink.channel_footprint_bytes`` —
-    the paper's ~40 KB bandwidth-delay product).  A packet only starts
-    crossing a link when the far buffer has room; credits return when the
+    the paper's ~40 KB bandwidth-delay product), partitioned per class by
+    the ``QosPolicy``.  A packet only starts crossing a link when its
+    class's partition of the far buffer has room; credits return when the
     packet leaves that buffer (consumed at the endpoint, or started on the
-    next link).  Congestion therefore backpressures upstream, hop by hop;
+    next link).  Congestion therefore backpressures upstream hop by hop —
+    but only within its own class: a saturated BULK stream cannot exhaust
+    DECODE's credits;
   * **dimension-ordered packet walks**: a flow's route defaults to
     ``Torus.route`` (X then Y then Z), or the BFS detour over the
     surviving graph under a ``FaultMap`` — the same one BFS the lowering
@@ -36,48 +43,65 @@ Consumers:
     schedules — that differential validates both models;
   * ``RdmaEndpoint`` (``sim=`` attached) — ``put_pages``/``get_time``
     inject their DMA drain (a host-interface FIFO resource per rank) and
-    wire legs as flows instead of summing closed-form terms;
+    wire legs as flows instead of summing closed-form terms; bulk PUTs
+    ride the BULK class, GET descriptors ride CONTROL;
   * ``ServingCluster``/``Engine`` — one cluster-wide sim; decode-step TP
-    collectives and migration PUTs ride the same links and contend;
+    collectives (DECODE class) and migration PUTs (BULK) ride the same
+    links and contend — by policy, not free-for-all;
   * ``ServingCluster.migrate`` — congestion-aware path selection probes
     candidate routes (``candidate_routes``, the fault BFS machinery) by
-    simulated completion time instead of hop count.
+    simulated completion time; ``striped_routes`` splits one bulk
+    transfer across the k best candidates (multi-path striping).
 """
 from __future__ import annotations
 
-import copy
 import dataclasses
 import heapq
-import itertools
 from typing import Hashable, Sequence
 
 from repro.core import apelink
 from repro.core.apelink import NetModel
 from repro.core.fabric.cost import CostEstimate
 from repro.core.fabric.lower import UnroutableError, _bfs_path, _lanes
+from repro.core.fabric.qos import SINGLE_CLASS, QosPolicy, TrafficClass
 from repro.core.fabric.schedule import (
     P2P, CollectiveSchedule, FaultMap, Phase, Transfer)
 from repro.core.topology import Torus
 
 # flows bigger than max_packets * packet_bytes coarsen their packets so the
-# event count stays bounded; packets never exceed the credit window (a
-# packet larger than the far buffer could never be granted credit)
+# event count stays bounded — up to the credit constraint: a packet must
+# fit its class's credit window (a packet larger than the far buffer could
+# never be granted credit), so under a multi-class policy coarsening stops
+# at half the class's credit partition and a bulk flow's event count is
+# bounded by nbytes / (partition / 2) instead of max_packets.  That is the
+# price of partitioned virtual-channel buffers (real VC routers have the
+# same packet-size bound); sims that only need FIFO semantics keep the
+# default single-class policy and the full-pool cap.
 DEFAULT_PACKET_BYTES = 4096
 DEFAULT_MAX_PACKETS = 256
 
 
 class _Link:
-    """One directed link (or host-IF resource): FIFO + credit window."""
+    """One directed link (or host-IF resource): per-class virtual-channel
+    FIFOs + partitioned credit windows, drained by the weighted arbiter."""
 
-    __slots__ = ("free_at", "queue", "credit", "busy_s", "bytes_carried",
-                 "retry_at")
+    __slots__ = ("free_at", "queues", "credits", "vtime", "vfloor",
+                 "busy_s", "bytes_carried", "class_bytes", "retry_at")
 
-    def __init__(self, credit: float) -> None:
+    def __init__(self, credits: Sequence[float]) -> None:
         self.free_at = 0.0
-        self.queue: list = []        # FIFO of _Pkt waiting to transmit
-        self.credit = credit         # downstream buffer bytes available
+        self.queues = tuple([] for _ in credits)  # per-class FIFO of _Pkt
+        self.credits = list(credits)  # downstream buffer bytes, per class
+        # start-time-fair arbiter state: a class's virtual time advances by
+        # cost/weight per service; the backlogged class with the least
+        # virtual time transmits next (single class: always channel 0)
+        self.vtime = [0.0 for _ in credits]
+        self.vfloor = 0.0            # service frontier for re-activations
         self.busy_s = 0.0
         self.bytes_carried = 0.0
+        # carried bytes per traffic-class TAG (not per channel): stays
+        # meaningful under single_class, where every tag shares channel 0
+        self.class_bytes = [0.0] * len(TrafficClass)
         self.retry_at: float | None = None   # pending retry event (dedup)
 
 
@@ -97,7 +121,7 @@ class _Flow:
     __slots__ = ("fid", "route", "nbytes", "pkt_bytes", "npkts", "sent",
                  "arrived", "req_start", "start_s", "finish_s", "pending",
                  "dependents", "src_over", "dst_over", "pace_s", "service_s",
-                 "resource", "channel", "label")
+                 "resource", "channel", "label", "cls", "cidx")
 
     def __init__(self, fid: int) -> None:
         self.fid = fid
@@ -119,6 +143,8 @@ class _Flow:
         self.resource: Hashable | None = None
         self.channel = 0                 # cable pick on 2-rings (see below)
         self.label = ""
+        self.cls: TrafficClass | None = None  # traffic class tag
+        self.cidx = 0                    # virtual-channel index under policy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +159,7 @@ class FlowResult:
     start_s: float
     finish_s: float
     label: str = ""
+    cls: TrafficClass | None = None
 
     @property
     def duration_s(self) -> float:
@@ -149,7 +176,12 @@ class FabricSim:
 
     Flows are injected (``inject`` for wire transfers, ``occupy`` for
     rank-local host-interface DMA occupancy), optionally chained with
-    ``after=``; ``run()`` drains the event queue.  The clock only moves
+    ``after=`` and tagged with a ``TrafficClass``; ``run()`` drains the
+    event queue.  ``qos`` selects the link arbiter: the default
+    ``QosPolicy(single_class=True)`` is the classic single-FIFO link
+    (class tags are inert); a multi-class ``QosPolicy()`` gives every
+    class its own virtual channel, weight-proportional bandwidth under
+    contention and a private credit partition.  The clock only moves
     forward: ``now`` is the frontier, and a timeline owner (the serving
     cluster) can ``advance`` it between logical windows.  Injecting at a
     time the simulator already processed is allowed but conservative —
@@ -160,12 +192,14 @@ class FabricSim:
                  packet_bytes: int = DEFAULT_PACKET_BYTES,
                  credit_bytes: float | None = None,
                  max_packets_per_flow: int = DEFAULT_MAX_PACKETS,
-                 faults: FaultMap | None = None) -> None:
+                 faults: FaultMap | None = None,
+                 qos: QosPolicy | None = None) -> None:
         if packet_bytes <= 0:
             raise ValueError(f"packet_bytes must be > 0, got {packet_bytes}")
         self.torus = torus
         self.net = net or NetModel()
         self.faults = faults or FaultMap()
+        self.qos = qos or SINGLE_CLASS
         self.link_bw = apelink.sustained_bandwidth(self.net.link)
         self.credit_bytes = (float(credit_bytes) if credit_bytes is not None
                              else apelink.channel_footprint_bytes(
@@ -174,11 +208,13 @@ class FabricSim:
             raise ValueError("credit_bytes must be > 0")
         self.packet_bytes = min(packet_bytes, int(self.credit_bytes) or 1)
         self.max_packets = max(1, max_packets_per_flow)
+        self._weights = self.qos.weight_vector()
+        self._class_credits = self.qos.partition_credits(self.credit_bytes)
         self._links: dict = {}
         self._flows: dict[int, _Flow] = {}
         self._heap: list = []
-        self._seq = itertools.count()
-        self._next_fid = itertools.count()
+        self._seq_n = 0          # event tie-break counter (plain int so
+        self._fid_n = 0          # probe snapshots can restore it exactly)
         self._frontier = 0.0
 
     # -- clock ----------------------------------------------------------------
@@ -232,18 +268,22 @@ class FabricSim:
                 f"no surviving route {src} -> {dst} in the simulated fabric")
         return tuple(path)
 
-    def _packetize(self, nbytes: float) -> tuple[float, int]:
+    def _packetize(self, nbytes: float, cap: float) -> tuple[float, int]:
+        """Packet size/count for a flow whose class credit partition is
+        ``cap`` — a packet larger than its partition could never be
+        granted credit."""
         if nbytes <= 0:
             return 0.0, 1
-        pkt = float(self.packet_bytes)
+        pkt = float(min(self.packet_bytes, int(cap) or 1))
         npkts = -(-nbytes // pkt)
         if npkts > self.max_packets:
-            pkt = min(nbytes / self.max_packets, self.credit_bytes)
+            pkt = min(nbytes / self.max_packets, cap)
         return pkt, int(-(-nbytes // pkt))
 
     def _new_flow(self, start_s: float | None,
                   after: Sequence[int]) -> _Flow:
-        f = _Flow(next(self._next_fid))
+        f = _Flow(self._fid_n)
+        self._fid_n += 1
         f.req_start = self._frontier if start_s is None else float(start_s)
         self._flows[f.fid] = f
         for dep_fid in after:
@@ -262,20 +302,32 @@ class FabricSim:
                route: Sequence[int] | None = None,
                after: Sequence[int] = (),
                src_gpu: bool = False, dst_gpu: bool = False,
-               channel: int = 0, label: str = "") -> int:
+               channel: int = 0, label: str = "",
+               cls: TrafficClass = TrafficClass.BULK) -> int:
         """Inject one flow of ``nbytes`` from rank ``src`` to ``dst``.
 
         ``route`` overrides the dimension-ordered (or fault-BFS) default;
         ``after`` lists flow ids that must finish first; ``channel`` picks
-        the cable on ambiguous 2-ring hops (see ``_link_key``).  Returns
-        the flow id — query its completion with ``finish_s``/``flow``
-        after ``run()``.
+        the cable on ambiguous 2-ring hops (see ``_link_key``); ``cls``
+        tags the flow's traffic class (inert under a single-class policy).
+        Returns the flow id — query its completion with
+        ``finish_s``/``flow`` after ``run()``.
         """
         f = self._new_flow(start_s, after)
         f.route = self._resolve_route(src, dst, route)
         f.channel = channel
+        f.cls = TrafficClass(cls)
+        f.cidx = self.qos.class_index(f.cls)
         f.nbytes = float(nbytes)
-        f.pkt_bytes, f.npkts = self._packetize(f.nbytes)
+        cap = self._class_credits[f.cidx]
+        if not self.qos.single_class:
+            # keep >= 2 packets inside the class's credit window: a packet
+            # as large as the whole partition leaves the channel credit-
+            # blocked at every arbitration instant (credits return one
+            # t_hop after transmit), handing lower-weight classes a slot
+            # they haven't earned
+            cap = max(cap * 0.5, 1.0)
+        f.pkt_bytes, f.npkts = self._packetize(f.nbytes, cap)
         f.src_over = self.net.t_inject \
             + (self.net.gpu_touch_overhead if src_gpu else 0.0)
         f.dst_over = self.net.t_receive \
@@ -289,10 +341,13 @@ class FabricSim:
 
     def occupy(self, resource: Hashable, busy_s: float, *,
                start_s: float | None = None,
-               after: Sequence[int] = (), label: str = "") -> int:
+               after: Sequence[int] = (), label: str = "",
+               cls: TrafficClass = TrafficClass.BULK) -> int:
         """Occupy a rank-local FIFO resource (e.g. ``("hostif", rank)``)
         for ``busy_s`` seconds — the host-interface DMA drain of one
-        operation.  Concurrent occupiers of the same resource serialize."""
+        operation.  Concurrent occupiers of the same resource serialize;
+        under a multi-class policy the arbiter weighs occupiers of
+        different classes by their service seconds."""
         if busy_s < 0:
             raise ValueError(f"negative busy_s {busy_s}")
         f = self._new_flow(start_s, after)
@@ -300,25 +355,54 @@ class FabricSim:
         f.service_s = float(busy_s)
         f.npkts = 1
         f.label = label
+        f.cls = TrafficClass(cls)
+        f.cidx = self.qos.class_index(f.cls)
         return f.fid
 
     # -- event machinery ------------------------------------------------------
     def _push(self, t: float, kind: str, arg) -> None:
-        heapq.heappush(self._heap, (t, next(self._seq), kind, arg))
+        heapq.heappush(self._heap, (t, self._seq_n, kind, arg))
+        self._seq_n += 1
 
     def _link(self, key) -> _Link:
         link = self._links.get(key)
         if link is None:
-            link = self._links[key] = _Link(self.credit_bytes)
+            link = self._links[key] = _Link(self._class_credits)
         return link
 
     def _enqueue(self, key, pkt: _Pkt, now: float) -> None:
-        self._link(key).queue.append(pkt)
+        link = self._link(key)
+        q = link.queues[self._flows[pkt.fid].cidx]
+        if not q:
+            # re-activation joins at the service frontier, so an idle class
+            # cannot bank virtual time and then monopolize the link
+            c = self._flows[pkt.fid].cidx
+            link.vtime[c] = max(link.vtime[c], link.vfloor)
+        q.append(pkt)
         self._try_start(key, now)
+
+    def _pick(self, link: _Link) -> int | None:
+        """The backlogged virtual channel that transmits next: least
+        virtual time among channels whose head packet has credit (ties
+        break toward the lowest class index).  None = every backlogged
+        channel is credit-blocked."""
+        best = -1
+        best_v = 0.0
+        for c, q in enumerate(link.queues):
+            if not q:
+                continue
+            pkt = q[0]
+            if pkt.nbytes > link.credits[c] \
+                    and self._flows[pkt.fid].resource is None:
+                continue   # this channel is blocked until credit returns
+            v = link.vtime[c]
+            if best < 0 or v < best_v:
+                best, best_v = c, v
+        return None if best < 0 else best
 
     def _try_start(self, key, now: float) -> None:
         link = self._link(key)
-        while link.queue:
+        while any(link.queues):
             if link.free_at > now:
                 # one pending retry per link: re-pushing at the same (or a
                 # later) wake time only duplicates work the scheduled one
@@ -328,25 +412,31 @@ class FabricSim:
                     self._push(link.free_at, "retry", key)
                     link.retry_at = link.free_at
                 return
-            pkt: _Pkt = link.queue[0]
+            c = self._pick(link)
+            if c is None:
+                return   # all backlogged channels credit-blocked
+            pkt: _Pkt = link.queues[c].pop(0)
             flow = self._flows[pkt.fid]
             is_resource = flow.resource is not None
-            if not is_resource and pkt.nbytes > link.credit:
-                return   # head-of-line blocked until credit returns
-            link.queue.pop(0)
             if is_resource:
                 dur = flow.service_s or 0.0
+                cost = dur       # seconds-unit fairness on resource links
             else:
-                link.credit -= pkt.nbytes
+                link.credits[c] -= pkt.nbytes
                 dur = pkt.nbytes / self.link_bw
+                cost = pkt.nbytes
+            # start-time-fair accounting (a no-op under single_class)
+            link.vfloor = max(link.vfloor, link.vtime[c])
+            link.vtime[c] += cost / self._weights[c]
             start = max(link.free_at, now)
             link.free_at = start + dur
             link.busy_s += dur
             link.bytes_carried += pkt.nbytes
+            link.class_bytes[int(flow.cls)] += pkt.nbytes
             if pkt.prev is not None:
                 # the packet left the upstream buffer: credit flows back
                 up = self._link(pkt.prev)
-                up.credit += pkt.nbytes
+                up.credits[c] += pkt.nbytes
                 self._try_start(pkt.prev, now)
             if is_resource:
                 self._push(link.free_at, "done", pkt)
@@ -358,9 +448,9 @@ class FabricSim:
     def _feed_source(self, flow: _Flow, now: float) -> None:
         """Queue the flow's next packet at the first link.
 
-        One packet per flow sits at the link head at a time, so the FIFO
-        round-robins concurrent flows at packet granularity (the VC
-        arbiter); ``pace_s`` throttles GPU-outbound sources."""
+        One packet per flow sits at the link head at a time, so each
+        virtual channel round-robins its concurrent flows at packet
+        granularity; ``pace_s`` throttles GPU-outbound sources."""
         idx = flow.sent
         flow.sent += 1
         last = flow.npkts - 1
@@ -421,7 +511,7 @@ class FabricSim:
                 if here == len(flow.route) - 1:
                     # consumed at the endpoint: buffer drains immediately
                     up = self._link(link_key)
-                    up.credit += pkt.nbytes
+                    up.credits[flow.cidx] += pkt.nbytes
                     self._try_start(link_key, t)
                     flow.arrived += 1
                     if flow.arrived == flow.npkts:
@@ -452,19 +542,34 @@ class FabricSim:
             dst=f.route[-1] if f.route else -1,
             nbytes=f.nbytes, hops=max(len(f.route) - 1, 0),
             start_s=f.start_s if f.start_s is not None else f.req_start,
-            finish_s=self.finish_s(fid), label=f.label)
+            finish_s=self.finish_s(fid), label=f.label, cls=f.cls)
 
     def link_stats(self) -> dict:
-        """Per-directed-link busy seconds and carried bytes (reporting)."""
-        return {k: {"busy_s": v.busy_s, "bytes": v.bytes_carried}
+        """Per-directed-link busy seconds and carried bytes (reporting);
+        ``class_bytes`` breaks the carried bytes down by traffic-class
+        TAG — always ``len(TrafficClass)`` entries, meaningful even under
+        ``single_class`` arbitration (where all tags share one channel)."""
+        return {k: {"busy_s": v.busy_s, "bytes": v.bytes_carried,
+                    "class_bytes": tuple(v.class_bytes)}
                 for k, v in self._links.items()}
+
+    def class_stats(self) -> dict[TrafficClass, float]:
+        """Bytes carried per traffic-class tag, summed over every directed
+        link (each wire hop counts — a 3-hop flow carries 3x its payload).
+        Accounting is by the flow's ``cls`` tag, so the breakdown is
+        meaningful even under ``single_class`` arbitration."""
+        totals = [0.0] * len(TrafficClass)
+        for link in self._links.values():
+            for c in range(len(TrafficClass)):
+                totals[c] += link.class_bytes[c]
+        return {cls: totals[int(cls)] for cls in TrafficClass}
 
     def prune(self) -> int:
         """Drop finished flows from the registry; returns how many.
 
         A long-lived timeline (the serving cluster's) accumulates settled
         flows forever otherwise, growing both the resident sim and every
-        ``probe_route`` deep copy without bound.  The owner calls this
+        ``probe_route`` snapshot without bound.  The owner calls this
         once its window accounting has read the finishes it needs —
         pruned flow ids can no longer be queried or used as ``after=``
         dependencies.  Link state (busy-until, credits, queues) is live
@@ -476,16 +581,100 @@ class FabricSim:
         return len(done)
 
     # -- what-if probing -------------------------------------------------------
+    def _snapshot(self) -> tuple:
+        """Record every piece of mutable scheduling state — links (queues,
+        credits, arbiter clocks), flows' progress, packets in flight, the
+        event heap and the counters — WITHOUT copying the static half of
+        the sim (torus, net, fault map, policy).  Bounded by the in-flight
+        state, where the old ``copy.deepcopy`` ghost was O(whole sim) per
+        probe."""
+        pkts: list[tuple] = []
+        seen: set[int] = set()
+
+        def note(p: _Pkt) -> None:
+            if id(p) not in seen:
+                seen.add(id(p))
+                pkts.append((p, p.hop, p.prev))
+
+        links = {}
+        for k, link in self._links.items():
+            queues = tuple(list(q) for q in link.queues)
+            for q in queues:
+                for p in q:
+                    note(p)
+            links[k] = (link.free_at, queues, list(link.credits),
+                        list(link.vtime), link.vfloor, link.busy_s,
+                        link.bytes_carried, list(link.class_bytes),
+                        link.retry_at)
+        heap = list(self._heap)
+        for _, _, kind, arg in heap:
+            if kind in ("arrive", "done"):
+                note(arg)
+            elif kind == "enqueue":
+                note(arg[1])
+        flows = {fid: (f.sent, f.arrived, f.req_start, f.start_s,
+                       f.finish_s, f.pending, list(f.dependents))
+                 for fid, f in self._flows.items()}
+        return (links, pkts, heap, flows, self._frontier,
+                self._seq_n, self._fid_n)
+
+    def _restore(self, snap: tuple) -> None:
+        """Put every mutable field back exactly as ``_snapshot`` saw it;
+        objects created since (ghost flows, their packets and events, new
+        links) are dropped.  The snapshot is consumed — its saved lists
+        become the live state."""
+        links, pkts, heap, flows, frontier, seq_n, fid_n = snap
+        for k in [k for k in self._links if k not in links]:
+            del self._links[k]
+        for k, (free_at, queues, credits, vtime, vfloor, busy_s,
+                carried, class_bytes, retry_at) in links.items():
+            link = self._links[k]
+            link.free_at = free_at
+            link.queues = queues
+            link.credits = credits
+            link.vtime = vtime
+            link.vfloor = vfloor
+            link.busy_s = busy_s
+            link.bytes_carried = carried
+            link.class_bytes = class_bytes
+            link.retry_at = retry_at
+        for p, hop, prev in pkts:
+            p.hop = hop
+            p.prev = prev
+        self._heap = heap
+        for fid in [fid for fid in self._flows if fid not in flows]:
+            del self._flows[fid]
+        for fid, (sent, arrived, req_start, start_s, finish_s, pending,
+                  dependents) in flows.items():
+            f = self._flows[fid]
+            f.sent = sent
+            f.arrived = arrived
+            f.req_start = req_start
+            f.start_s = start_s
+            f.finish_s = finish_s
+            f.pending = pending
+            f.dependents = dependents
+        self._frontier = frontier
+        self._seq_n = seq_n
+        self._fid_n = fid_n
+
     def probe_route(self, route: Sequence[int], nbytes: float, *,
                     start_s: float | None = None, **kw) -> float:
         """Simulated completion time of a hypothetical flow along
         ``route`` against the CURRENT traffic, without committing anything
-        to the timeline (runs on a deep copy)."""
-        ghost = copy.deepcopy(self)
-        start = ghost.now if start_s is None else start_s
-        fid = ghost.inject(route[0], route[-1], nbytes, start_s=start,
-                           route=route, **kw)
-        return ghost.finish_s(fid) - start
+        to the timeline.
+
+        Runs on the live simulator under a bounded snapshot/restore of the
+        link + flow scheduling state (no more whole-sim deep copy), so
+        probing k candidate routes costs O(k * in-flight state)."""
+        snap = self._snapshot()
+        try:
+            start = self._frontier if start_s is None else start_s
+            fid = self.inject(route[0], route[-1], nbytes, start_s=start,
+                              route=route, **kw)
+            return self.finish_s(fid) - start
+        finally:
+            self._restore(snap)
 
 
 # ----------------------------------------------------------------------------
@@ -515,6 +704,7 @@ def inject_schedule(sim: FabricSim, schedule: CollectiveSchedule,
                     nbytes: float, *, start_s: float | None = None,
                     after: Sequence[int] = (),
                     granularity: str = "phase",
+                    cls: TrafficClass = TrafficClass.COLLECTIVE,
                     **endpoint_kw) -> list[int]:
     """Inject a collective's traffic into a (shared) sim; returns the
     tail flow ids (the collective is done when all of them finish).
@@ -524,7 +714,8 @@ def inject_schedule(sim: FabricSim, schedule: CollectiveSchedule,
     the ``backend="sim"`` estimator.  ``granularity="phase"`` aggregates
     each phase's rounds into one flow per (lane, direction) — per-link
     bytes identical, round barriers elided — the cheap form the serving
-    timeline uses for background traffic.
+    timeline uses for background traffic.  ``cls`` tags every flow of the
+    collective (serving decode steps pass ``TrafficClass.DECODE``).
     """
     if granularity not in ("round", "phase"):
         raise ValueError(f"unknown granularity {granularity!r}")
@@ -541,7 +732,7 @@ def inject_schedule(sim: FabricSim, schedule: CollectiveSchedule,
                     fids.append(sim.inject(
                         ra, rb, tr.frac * nbytes * rounds, start_s=start_s,
                         route=route, after=tuple(tail), channel=ti,
-                        **endpoint_kw))
+                        cls=cls, **endpoint_kw))
             if fids:
                 tail = fids
         else:
@@ -553,14 +744,16 @@ def inject_schedule(sim: FabricSim, schedule: CollectiveSchedule,
                         fids.append(sim.inject(
                             ra, rb, tr.frac * nbytes, start_s=start_s,
                             route=route, after=tuple(tail), channel=ti,
-                            **endpoint_kw))
+                            cls=cls, **endpoint_kw))
                 if fids:
                     tail = fids
     return tail
 
 
 def simulate_schedule(schedule: CollectiveSchedule, nbytes: int,
-                      net: NetModel | None = None,
+                      net: NetModel | None = None, *,
+                      cls: TrafficClass = TrafficClass.COLLECTIVE,
+                      qos: QosPolicy | None = None,
                       **endpoint_kw) -> CostEstimate:
     """Event-driven price of one collective on a quiet fabric — the
     ``backend="sim"`` path of ``fabric.estimate``.
@@ -568,10 +761,11 @@ def simulate_schedule(schedule: CollectiveSchedule, nbytes: int,
     Rounds barrier on each other exactly like the analytic model's
     sequential steps, so on single-flow schedules (no two messages of a
     round sharing a link direction) the two backends must agree — the
-    differential in ``tests/fabric_checks.py`` holds both to it.
+    differential in ``tests/fabric_checks.py`` holds both to it.  The
+    default (no ``qos``) prices on the single-class FIFO link.
     """
     sim = FabricSim(Torus(schedule.torus_dims), net,
-                    faults=schedule.faults)
+                    faults=schedule.faults, qos=qos)
     phase_s = []
     t = 0.0
     tail: list[int] = []
@@ -579,7 +773,7 @@ def simulate_schedule(schedule: CollectiveSchedule, nbytes: int,
         sub = dataclasses.replace(schedule, phases=(ph,))
         new_tail = inject_schedule(sim, sub, nbytes, start_s=t,
                                    after=tuple(tail), granularity="round",
-                                   **endpoint_kw)
+                                   cls=cls, **endpoint_kw)
         if new_tail != list(tail):
             tail = new_tail
             sim.run()
@@ -637,12 +831,62 @@ def candidate_routes(torus: Torus, src: int, dst: int,
 
 def best_route(sim: FabricSim, src: int, dst: int, nbytes: float, *,
                faults: FaultMap | None = None,
-               start_s: float | None = None) -> tuple[tuple[int, ...], float]:
+               start_s: float | None = None,
+               cls: TrafficClass = TrafficClass.BULK
+               ) -> tuple[tuple[int, ...], float]:
     """The candidate route with the least *simulated* completion time
     against the sim's current traffic (ties break toward fewer hops —
     candidates come sorted, and ``min`` is stable)."""
     cands = candidate_routes(sim.torus, src, dst, faults)
-    timed = [(sim.probe_route(r, nbytes, start_s=start_s), len(r), r)
+    timed = [(sim.probe_route(r, nbytes, start_s=start_s, cls=cls), len(r), r)
              for r in cands]
     t, _, route = min(timed, key=lambda x: (x[0], x[1]))
     return route, t
+
+
+def striped_routes(sim: FabricSim, src: int, dst: int, nbytes: float, *,
+                   k: int = 3, faults: FaultMap | None = None,
+                   start_s: float | None = None,
+                   cls: TrafficClass = TrafficClass.BULK
+                   ) -> list[tuple[tuple[int, ...], float]]:
+    """Multi-path stripe plan for one bulk transfer: the ``k`` candidate
+    routes with the least probed completion time, each with the fraction
+    of the payload it should carry — proportional to its probed goodput
+    (``nbytes / probed_s``), so a congested member of the stripe set gets
+    proportionally less and the stripes finish together.
+
+    Returns ``[(route, frac), ...]`` with fracs summing to 1; degenerates
+    to ``[(best_route, 1.0)]`` when only one candidate survives.  This is
+    the ROADMAP "adaptive multi-path routing" item: one transfer split
+    across several loop-free detour-family routes at once."""
+    if k < 1:
+        raise ValueError(f"stripe count k must be >= 1, got {k}")
+    cands = candidate_routes(sim.torus, src, dst, faults)
+    timed = sorted(
+        ((sim.probe_route(r, nbytes, start_s=start_s, cls=cls), len(r), r)
+         for r in cands), key=lambda x: (x[0], x[1]))
+    picked = timed[:k]
+    goodput = [1.0 / max(t, 1e-12) for t, _, _ in picked]
+    total = sum(goodput)
+    return [(r, g / total) for (_, _, r), g in zip(picked, goodput)]
+
+
+def stripe_counts(plan: Sequence[tuple[tuple[int, ...], float]],
+                  n_items: int) -> list[int]:
+    """Apportion ``n_items`` indivisible units (pages) across a
+    ``striped_routes`` plan: largest-remainder rounding of the per-route
+    fractions, so the counts always sum to ``n_items`` exactly.  Entries
+    may be 0 when ``n_items < len(plan)`` — callers drop those stripes.
+    The ONE page-split rule shared by the serving cluster, the QoS
+    benchmark and the tests, so the gated numbers price exactly the
+    production split."""
+    if n_items < 0:
+        raise ValueError(f"negative n_items {n_items}")
+    exact = [frac * n_items for _, frac in plan]
+    counts = [int(e) for e in exact]
+    short = n_items - sum(counts)
+    order = sorted(range(len(plan)), key=lambda i: exact[i] - counts[i],
+                   reverse=True)
+    for i in order[:short]:
+        counts[i] += 1
+    return counts

@@ -27,6 +27,7 @@ import jax
 from jax import lax
 
 from repro.core import apelink, jaxcompat
+from repro.core.fabric.qos import TrafficClass
 from repro.core.tlb import PAGE_BYTES, Tlb
 from repro.core.topology import Torus
 
@@ -207,7 +208,8 @@ class RdmaEndpoint:
                   dst_endpoint: "RdmaEndpoint | None" = None,
                   dst_region: Region | None = None,
                   dst_pages: Sequence[int] | None = None,
-                  faults=None, schedule=None) -> float:
+                  faults=None, schedule=None, stripes=None,
+                  cls: TrafficClass = TrafficClass.BULK) -> float:
         """Bulk one-sided PUT of selected ``page_nbytes``-sized pages of a
         registered region to rank ``dst``; returns the modelled seconds.
 
@@ -227,6 +229,17 @@ class RdmaEndpoint:
         model as ``translate_region``; the serving allocator's
         one-entry-per-KV-page registration shortcut is separate and
         coarser.)
+
+        **Multi-path striping**: pass ``stripes`` — a sequence of
+        ``(schedule, nbytes)`` legs whose bytes sum to the payload — to
+        split the PUT across several routes at once (the serving
+        cluster's ``route_policy="striped"``).  The legs leave one DMA
+        drain together and fly concurrently; the receiver cannot hand the
+        pages over until every stripe has landed AND its reorder window
+        has matched the out-of-order completions, modelled as one extra
+        ``t_receive`` per additional stripe.  ``cls`` tags every timeline
+        leg's traffic class (default ``BULK`` — a migration must not
+        starve decode on a QoS fabric).
         """
         self._check_registered(region)
         if page_nbytes <= 0:
@@ -234,10 +247,27 @@ class RdmaEndpoint:
         from repro.core import fabric
         t_src = self._translate_pages(self.tlb, region, pages, page_nbytes)
         nbytes = len(pages) * page_nbytes
-        sched = schedule if schedule is not None else fabric.lower_p2p(
-            self.torus, self.rank, dst, faults=faults)
+        if stripes is not None:
+            if schedule is not None:
+                raise ValueError("pass schedule= or stripes=, not both")
+            legs = [(s, float(b)) for s, b in stripes]
+            if not legs:
+                raise ValueError("stripes must list at least one leg")
+            total_b = sum(b for _, b in legs)
+            if abs(total_b - nbytes) > 0.5:
+                raise ValueError(
+                    f"stripe bytes {total_b} != payload {nbytes}")
+        else:
+            sched = schedule if schedule is not None else fabric.lower_p2p(
+                self.torus, self.rank, dst, faults=faults)
+            legs = [(sched, float(nbytes))]
         t_dma = self.transfer_time(nbytes)
-        t_wire = fabric.estimate(sched, nbytes, self.net).total_s
+        t_wire = max(fabric.estimate(s, b, self.net).total_s
+                     for s, b in legs)
+        # receiver reorder/settle: every stripe past the first is one more
+        # out-of-order completion the RX window must match before the
+        # landed pages are usable
+        t_settle = (len(legs) - 1) * self.net.t_receive
         t_dst = 0.0
         if dst_endpoint is not None and dst_region is not None:
             dst_endpoint._check_registered(dst_region)
@@ -245,28 +275,36 @@ class RdmaEndpoint:
                 dst_endpoint.tlb, dst_region,
                 dst_pages if dst_pages is not None else pages, page_nbytes)
         # the sum-of-isolated price: what this PUT costs on a quiet fabric
-        isolated = t_src + t_dma + t_wire + t_dst
+        isolated = t_src + t_dma + t_wire + t_settle + t_dst
         if self.sim is None:
             self.last_put_report = {"total_s": isolated,
                                     "isolated_s": isolated,
                                     "dma_s": t_dma, "wire_s": t_wire,
-                                    "translate_s": t_src + t_dst}
+                                    "translate_s": t_src + t_dst,
+                                    "stripes": len(legs),
+                                    "settle_s": t_settle}
             return isolated
         # shared timeline: the DMA drain occupies this card's host-IF slot,
-        # then the payload walks the route packet by packet — both legs
+        # then the payload walks its route(s) packet by packet — all legs
         # contending with whatever else is in flight on the sim
         start = self.sim.now
-        route = sched.route if sched.collective == fabric.P2P else None
         dma = self.sim.occupy(("hostif", self.rank), t_dma,
-                              start_s=start + t_src,
+                              start_s=start + t_src, cls=cls,
                               label=f"put_dma r{self.rank}")
-        wire = self.sim.inject(self.rank, dst, nbytes, route=route,
-                               after=(dma,),
-                               label=f"put {self.rank}->{dst}")
-        total = (self.sim.finish_s(wire) - start) + t_dst
+        wire_fids = []
+        for i, (s, b) in enumerate(legs):
+            route = s.route if s.collective == fabric.P2P else None
+            wire_fids.append(self.sim.inject(
+                self.rank, dst, b, route=route, after=(dma,), cls=cls,
+                label=f"put {self.rank}->{dst}"
+                      + (f" stripe{i}" if len(legs) > 1 else "")))
+        wire_end = max(self.sim.finish_s(f) for f in wire_fids)
+        total = (wire_end - start) + t_settle + t_dst
         self.last_put_report = {"total_s": total, "isolated_s": isolated,
                                 "dma_s": t_dma, "wire_s": t_wire,
-                                "translate_s": t_src + t_dst}
+                                "translate_s": t_src + t_dst,
+                                "stripes": len(legs),
+                                "settle_s": t_settle}
         return total
 
     def get_time(self, src: int, nbytes: int, region: Region, *,
@@ -295,12 +333,14 @@ class RdmaEndpoint:
         start = self.sim.now
         fid_req = self.sim.inject(self.rank, src, 64, route=req.route,
                                   start_s=start + t_local,
+                                  cls=TrafficClass.CONTROL,
                                   label=f"get_req {self.rank}->{src}")
         fid_dma = self.sim.occupy(("hostif", src),
                                   self.transfer_time(nbytes),
-                                  after=(fid_req,), label=f"get_dma r{src}")
+                                  after=(fid_req,), cls=TrafficClass.BULK,
+                                  label=f"get_dma r{src}")
         fid_back = self.sim.inject(src, self.rank, nbytes, route=back.route,
-                                   after=(fid_dma,),
+                                   after=(fid_dma,), cls=TrafficClass.BULK,
                                    label=f"get {src}->{self.rank}")
         return self.sim.finish_s(fid_back) - start
 

@@ -245,13 +245,22 @@ class Trainer:
         axis = self.tcfg.dp_axis
         dp = self.mesh.shape[axis]
         backend = self.tcfg.cost_backend
-        total = fabric.estimate(scheds["loss"], 4, backend=backend).total_s
+        # trainer collectives carry the COLLECTIVE traffic class.  Both
+        # default backends price a quiet fabric where the tag is inert
+        # (analytic ignores it; backend="sim" builds a single-class sim);
+        # it matters when a caller prices these schedules on a QoS sim —
+        # fabric.estimate(..., backend="sim", qos=QosPolicy()) or a
+        # shared ServingCluster timeline — where the flows then ride the
+        # COLLECTIVE virtual channel
+        cls = fabric.TrafficClass.COLLECTIVE
+        total = fabric.estimate(scheds["loss"], 4, backend=backend,
+                                cls=cls).total_s
         for p in jax.tree.leaves(self.params):
             chunk_bytes = -(-p.size // dp) * p.dtype.itemsize
             total += fabric.estimate(scheds["rs"], 4 * p.size,
-                                     backend=backend).total_s
+                                     backend=backend, cls=cls).total_s
             total += fabric.estimate(scheds["ag"], chunk_bytes,
-                                     backend=backend).total_s
+                                     backend=backend, cls=cls).total_s
         return total
 
     def _bwd_compute_model_s(self) -> float:
@@ -284,7 +293,8 @@ class Trainer:
             self.overlap_estimate = fabric.estimate_overlapped(
                 scheds["rs"], self.bucket_plan, self._bwd_compute_model_s(),
                 queue_depth=self.rdma.queue_depth,
-                backend=self.tcfg.cost_backend)
+                backend=self.tcfg.cost_backend,
+                cls=fabric.TrafficClass.COLLECTIVE)
         else:
             self.bucket_plan = None
             self.overlap_estimate = None

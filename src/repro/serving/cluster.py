@@ -88,6 +88,7 @@ class MigrationReport:
     reprefill_s: float           # the decode stall migrating avoided
     isolated_s: float = 0.0      # sum-of-isolated price (quiet fabric)
     route_policy: str = "hops"   # how the route was picked
+    stripes: int = 1             # wire legs the PUT was split across
 
     @property
     def rerouted(self) -> bool:
@@ -134,7 +135,8 @@ class ServingCluster:
                  page_tokens: int = 16, pool_pages: int | None = None,
                  chunked_prefill: bool = False,
                  tp_axes: tuple[str, ...] | None = (),
-                 net=None, sim_kw: dict | None = None) -> None:
+                 net=None, sim_kw: dict | None = None,
+                 qos: fabric.QosPolicy | None = None) -> None:
         self.cfg = cfg
         self.torus = torus
         ranks = tuple(node_ranks) if node_ranks is not None \
@@ -145,9 +147,15 @@ class ServingCluster:
         # RDMA endpoint and decode-step TP collectives inject flows here,
         # so a migration PUT and live decode traffic genuinely contend for
         # the links they share (fabric.sim.FabricSim); one NetModel prices
-        # every node's wire identically
+        # every node's wire identically.  ``qos`` selects the link
+        # arbiter: a multi-class QosPolicy gives decode-step TP flows
+        # (DECODE) weighted protection from migration PUTs (BULK); the
+        # default keeps the classic single-FIFO link.
         self.net = net or NetModel()
-        self.sim = fabric.FabricSim(torus, self.net, **(sim_kw or {}))
+        sim_kw = dict(sim_kw or {})
+        if qos is not None:
+            sim_kw.setdefault("qos", qos)
+        self.sim = fabric.FabricSim(torus, self.net, **sim_kw)
         self.nodes: dict[int, ClusterNode] = {}
         for r in ranks:
             lm = PagedLM(cfg, params, max_batch=max_batch, max_seq=max_seq,
@@ -168,15 +176,22 @@ class ServingCluster:
     # -- fault feed (LO|FA|MO master view) --------------------------------------
     def fail_link(self, a: int, b: int) -> None:
         """Mark the first-neighbour link (a, b) dead; later migrations
-        reroute around it (the fault machinery's BFS detour)."""
+        reroute around it (the fault machinery's BFS detour), and every
+        node's decode TP twin is re-lowered through ``fabric.rewrite`` so
+        the per-step TP flows price the shrunk/detoured rings honestly —
+        not just via the sim's route resolution."""
         self.faults = fabric.FaultMap.normalized(
             self.faults.dead_nodes,
             set(self.faults.dead_links) | {(a, b)})
         self.sim.faults = self.faults   # sim flows detour the same map
+        for node in self.nodes.values():
+            node.lm.relower_tp(self.faults)
 
     def clear_faults(self) -> None:
         self.faults = fabric.FaultMap()
         self.sim.faults = self.faults
+        for node in self.nodes.values():
+            node.lm.relower_tp(self.faults)
 
     # -- router -----------------------------------------------------------------
     def submit(self, req: Request) -> int:
@@ -246,7 +261,8 @@ class ServingCluster:
                        "(pending/prefilling/finished requests don't migrate)")
 
     def migrate(self, rid: int, dst_rank: int, *,
-                route_policy: str = "congestion") -> MigrationReport:
+                route_policy: str = "congestion",
+                stripe_k: int = 3) -> MigrationReport:
         """Live-migrate a running request's KV pages to ``dst_rank``.
 
         Decode resumes on the destination with bitwise-identical tokens;
@@ -261,6 +277,13 @@ class ServingCluster:
         minimal dimension-ordered path, but when decode collectives are
         hammering the direct links a longer detour can genuinely win.
         ``route_policy="hops"`` keeps the classic hop-count-minimal route.
+        ``route_policy="striped"`` splits the PUT across the ``stripe_k``
+        best-probed candidate routes at once (``fabric.striped_routes``),
+        each stripe carrying a probed-goodput-proportional page share —
+        multi-path bandwidth aggregation, priced with the receiver's
+        reorder/settle model (``RdmaEndpoint.put_pages(stripes=...)``).
+        The PUT rides the BULK traffic class: on a QoS fabric it cannot
+        starve the decode-step collectives it contends with.
         """
         src_node, req = self._find_running(rid)
         if dst_rank not in self.nodes:
@@ -273,6 +296,7 @@ class ServingCluster:
         state = src_node.lm.export_slot(old_slot)
         # route first: an unroutable fabric must fail before any state
         # moves (the request keeps decoding on the source)
+        stripes = None
         if route_policy == "congestion":
             route, _ = fabric.best_route(
                 self.sim, src_node.rank, dst_rank, state.nbytes,
@@ -281,6 +305,12 @@ class ServingCluster:
         elif route_policy == "hops":
             sched = fabric.lower_p2p(self.torus, src_node.rank, dst_rank,
                                      faults=self.faults)
+        elif route_policy == "striped":
+            plan = fabric.striped_routes(
+                self.sim, src_node.rank, dst_rank, state.nbytes,
+                k=stripe_k, faults=self.faults)
+            stripes = self._stripe_pages(plan, state.n_pages)
+            sched = max((s for s, _ in stripes), key=lambda s: s.max_hops)
         else:
             raise ValueError(f"unknown route_policy {route_policy!r}")
         new_slot = dst_node.lm.import_slot(state)
@@ -293,7 +323,8 @@ class ServingCluster:
             dst_endpoint=dst_node.lm.endpoint,
             dst_region=dst_node.lm.allocator.region,
             dst_pages=dst_node.lm.slot_pages[new_slot][:state.n_pages],
-            schedule=sched)
+            schedule=None if stripes is not None else sched,
+            stripes=stripes)
         src_node.engine.detach(old_slot)
         src_node.lm.free_slot(old_slot)
         req.slot = new_slot
@@ -307,9 +338,26 @@ class ServingCluster:
             modelled_s=modelled,
             reprefill_s=reprefill_stall_s(self.n_params, req.pos),
             isolated_s=put.get("isolated_s", modelled),
-            route_policy=route_policy)
+            route_policy=route_policy,
+            stripes=put.get("stripes", 1))
         self.migrations.append(report)
         return report
+
+    def _stripe_pages(self, plan, n_pages: int) -> list[tuple]:
+        """Turn a ``fabric.striped_routes`` plan into put_pages stripes:
+        page-granular byte shares (``fabric.stripe_counts``, zero-page
+        stripes dropped — a stripe must carry at least one page)."""
+        counts = fabric.stripe_counts(plan, n_pages)
+        stripes = []
+        for (route, _), c in zip(plan, counts):
+            if c <= 0:
+                continue
+            sched = fabric.lower_route(self.torus, route, faults=self.faults)
+            stripes.append((sched, c * self.page_nbytes))
+        if not stripes:   # zero live pages: one empty leg on the best route
+            stripes = [(fabric.lower_route(self.torus, plan[0][0],
+                                           faults=self.faults), 0)]
+        return stripes
 
     def rebalance(self, threshold: int = 2) -> MigrationReport | None:
         """Migrate one running request from the most- to the least-loaded

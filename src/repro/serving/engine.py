@@ -166,6 +166,7 @@ class PagedLM:
             tp_axes = tuple(names[i] if i < len(names) else f"d{i}"
                             for i in range(self.torus.ndims))
         self.tp_axes = tuple(tp_axes)
+        self._cost_backend = cost_backend
         if self.tp_axes:
             self.tp_schedule = fabric.lower_all_reduce(self.torus,
                                                        self.tp_axes)
@@ -173,17 +174,48 @@ class PagedLM:
             # per-decode-step TP wire bytes: one residual all-reduce per
             # layer (the per-step traffic a shared sim injects as flows)
             self.tp_step_bytes = L * ar_bytes
+            self._tp_base = self.tp_schedule   # healthy-fabric lowering
+            self._tp_ar_bytes = ar_bytes
             self.predicted_tp_comm_s = L * fabric.estimate(
                 self.tp_schedule, ar_bytes, self.net,
                 backend=cost_backend).total_s
         else:
             self.tp_schedule = None
+            self._tp_base = None
+            self._tp_ar_bytes = 0
             self.tp_step_bytes = 0
             self.predicted_tp_comm_s = 0.0
         self.slot_pages: dict[int, list[int]] = {}
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
         self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
+
+    # -- fault feed -------------------------------------------------------------
+    def relower_tp(self, faults) -> bool:
+        """Re-lower the decode TP twin through ``fabric.rewrite`` against
+        the cluster's fault map, so the per-step TP flows the engine
+        injects price shrunk/detoured rings honestly (a dead link on the
+        TP ring becomes explicit detour hops in the schedule, not just a
+        sim-side route resolution).  Returns True when the twin changed.
+
+        A fault map that partitions the TP ring is unroutable; the last
+        routable twin is kept — the sim's own BFS keeps detouring what it
+        can, and the cluster surfaces the partition on the paths that
+        genuinely need the dead links."""
+        if self._tp_base is None:
+            return False
+        try:
+            sched = fabric.rewrite(self._tp_base, faults) if faults \
+                else self._tp_base
+        except fabric.UnroutableError:
+            return False
+        if sched == self.tp_schedule:
+            return False
+        self.tp_schedule = sched
+        self.predicted_tp_comm_s = self.cfg.n_layers * fabric.estimate(
+            sched, self._tp_ar_bytes, self.net,
+            backend=self._cost_backend).total_s
+        return True
 
     # -- slot management --------------------------------------------------------
     def _claim(self, npages: int) -> int:
@@ -574,11 +606,14 @@ class Engine:
         nxt = self.lm.decode_batch(tokens, active)
         if self.lm.sim is not None and self.lm.tp_schedule is not None:
             # this step's TP collectives enter the shared timeline at the
-            # current window start; they are settled (and priced, WITH
-            # whatever traffic they contended against) by settle_comm
+            # current window start, tagged DECODE: on a QoS fabric the
+            # link arbiter protects them from concurrent BULK migrations;
+            # they are settled (and priced, WITH whatever traffic they
+            # contended against) by settle_comm
             self.pending_comm_fids.extend(fabric.inject_schedule(
                 self.lm.sim, self.lm.tp_schedule, self.lm.tp_step_bytes,
-                start_s=self.lm.sim.now, granularity="phase"))
+                start_s=self.lm.sim.now, granularity="phase",
+                cls=fabric.TrafficClass.DECODE))
             self.sim_comm_steps += 1
         self.steps += 1
         self._step_times.append(time.perf_counter() - t0)

@@ -1,0 +1,350 @@
+"""QoS traffic-class subsystem (fabric/qos + the FabricSim VC arbiter).
+
+Four contracts:
+  * **compatibility**: ``QosPolicy(single_class=True)`` (and the default
+    ``qos=None``) reproduces the pre-QoS single-FIFO link exactly — class
+    tags are inert and finishes are bitwise identical;
+  * **protection**: with the default multi-class policy, a DECODE flow
+    sharing a saturated link with BULK traffic completes within its
+    weighted share (<= 1.10x isolated), while the FIFO link lets bulk
+    inflate it several-fold — and bulk still completes (no starvation in
+    either direction);
+  * **credit isolation**: a BULK merge bottleneck fills only BULK's
+    partition of the upstream buffer; DECODE's credit window survives;
+  * **striping**: ``striped_routes`` + ``put_pages(stripes=...)`` split
+    one bulk PUT across the probed detour family and beat the best single
+    route when spare path capacity exists.
+
+Plus the probe_route snapshot/restore contract: a probe (and a
+best_route scan) leaves the timeline bitwise identical to never having
+probed.
+"""
+import pytest
+
+from repro.core import fabric
+from repro.core.fabric import FabricSim, QosPolicy, TrafficClass
+from repro.core.fabric.qos import SINGLE_CLASS
+from repro.core.rdma import RdmaEndpoint
+from repro.core.topology import Torus
+
+
+# ---------------------------------------------------------------------------
+# policy object
+# ---------------------------------------------------------------------------
+
+def test_policy_defaults_and_validation():
+    p = QosPolicy()
+    assert p.n_classes == len(TrafficClass) == 4
+    assert p.weights[TrafficClass.DECODE] > p.weights[TrafficClass.BULK]
+    parts = p.partition_credits(40960.0)
+    assert len(parts) == 4 and sum(parts) == pytest.approx(40960.0)
+    assert all(c > 0 for c in parts)
+    s = QosPolicy(single_class=True)
+    assert s.n_classes == 1
+    assert s.partition_credits(40960.0) == (40960.0,)
+    assert s.class_index(TrafficClass.BULK) == 0
+    with pytest.raises(ValueError):
+        QosPolicy(weights={TrafficClass.BULK: 0.0})
+    with pytest.raises(ValueError):
+        QosPolicy(credit_frac={TrafficClass.DECODE: -0.1})
+
+
+def test_policy_partial_override_keeps_other_defaults():
+    p = QosPolicy(weights={TrafficClass.BULK: 2.0})
+    assert p.weights[TrafficClass.BULK] == 2.0
+    assert p.weights[TrafficClass.DECODE] \
+        == QosPolicy().weights[TrafficClass.DECODE]
+
+
+# ---------------------------------------------------------------------------
+# single-class compatibility: the pre-QoS FIFO link, bitwise
+# ---------------------------------------------------------------------------
+
+def _mixed_flows(sim):
+    fids = [
+        sim.inject(0, 1, 1 << 20, cls=TrafficClass.DECODE),
+        sim.inject(0, 2, 3 << 20, cls=TrafficClass.BULK),
+        sim.inject(1, 2, 1 << 19, cls=TrafficClass.COLLECTIVE),
+        sim.inject(0, 1, 64, cls=TrafficClass.CONTROL),
+    ]
+    fids.append(sim.inject(2, 3, 1 << 20, after=(fids[0],),
+                           cls=TrafficClass.BULK))
+    fids.append(sim.occupy(("hostif", 0), 1e-4, cls=TrafficClass.BULK))
+    return [sim.finish_s(f) for f in fids]
+
+
+def test_single_class_is_the_default_and_ignores_tags():
+    t = Torus((8,))
+    default = _mixed_flows(FabricSim(t))
+    explicit = _mixed_flows(FabricSim(t, qos=QosPolicy(single_class=True)))
+    assert default == explicit            # bitwise identical
+    assert FabricSim(t).qos is SINGLE_CLASS
+    # permuting the class tags changes nothing under single_class
+    s = FabricSim(t)
+    a = [s.inject(0, 1, 1 << 20, cls=c) for c in
+         (TrafficClass.BULK, TrafficClass.DECODE)]
+    s2 = FabricSim(t)
+    b = [s2.inject(0, 1, 1 << 20, cls=c) for c in
+         (TrafficClass.DECODE, TrafficClass.BULK)]
+    assert [s.finish_s(f) for f in a] == [s2.finish_s(f) for f in b]
+
+
+def test_flow_result_carries_class_tag():
+    s = FabricSim(Torus((4,)))
+    fid = s.inject(0, 1, 4096, cls=TrafficClass.DECODE)
+    assert s.flow(fid).cls == TrafficClass.DECODE
+
+
+# ---------------------------------------------------------------------------
+# decode protection under bulk interference
+# ---------------------------------------------------------------------------
+
+def _decode_under_bulk(qos):
+    """(isolated_s, contended_s, bulk_s) for one DECODE flow sharing its
+    link with a 16x larger BULK transfer."""
+    iso = FabricSim(Torus((8,)), qos=qos)
+    t_iso = iso.finish_s(iso.inject(0, 1, 4 << 20, cls=TrafficClass.DECODE))
+    sim = FabricSim(Torus((8,)), qos=qos)
+    b = sim.inject(0, 1, 64 << 20, cls=TrafficClass.BULK)
+    d = sim.inject(0, 1, 4 << 20, cls=TrafficClass.DECODE)
+    return t_iso, sim.finish_s(d), sim.finish_s(b)
+
+
+def test_decode_protected_under_default_policy():
+    t_iso, t_dec, t_bulk = _decode_under_bulk(QosPolicy())
+    assert t_dec / t_iso <= 1.10          # the acceptance bar
+    assert t_bulk < float("inf")          # bulk still completes
+    # and the same scenario on the FIFO link shows why QoS exists
+    f_iso, f_dec, _ = _decode_under_bulk(QosPolicy(single_class=True))
+    assert f_dec / f_iso > 1.3
+
+
+def test_bulk_not_starved_and_work_conserved():
+    """The arbiter is work-conserving: bulk alone runs at full link rate
+    under either policy, and under contention bulk's finish is bounded by
+    (total bytes / link rate) + its weighted tail."""
+    t = Torus((8,))
+    alone_q = FabricSim(t, qos=QosPolicy())
+    t_alone = alone_q.finish_s(
+        alone_q.inject(0, 1, 64 << 20, cls=TrafficClass.BULK))
+    alone_f = FabricSim(t)
+    t_fifo = alone_f.finish_s(
+        alone_f.inject(0, 1, 64 << 20, cls=TrafficClass.BULK))
+    assert t_alone == pytest.approx(t_fifo, rel=0.05)
+    _, _, t_bulk = _decode_under_bulk(QosPolicy())
+    # total work is 68 MB; bulk (the last finisher) pays ~the sum
+    assert t_bulk == pytest.approx(t_alone * 68 / 64, rel=0.10)
+
+
+def test_throughput_ratio_tracks_weights():
+    """Two saturating flows on one link: while both are backlogged, each
+    class's goodput share is weight-proportional."""
+    w_d = QosPolicy().weights[TrafficClass.DECODE]
+    w_b = QosPolicy().weights[TrafficClass.BULK]
+    sim = FabricSim(Torus((8,)), qos=QosPolicy())
+    n = 16 << 20
+    d = sim.inject(0, 1, n, cls=TrafficClass.DECODE)
+    sim.inject(0, 1, n, cls=TrafficClass.BULK)
+    t_d = sim.finish_s(d)
+    share = n / t_d / sim.link_bw          # decode's share while contended
+    assert share == pytest.approx(w_d / (w_d + w_b), rel=0.05)
+
+
+def test_credit_partition_isolates_decode_from_bulk_backpressure():
+    """A BULK merge bottleneck at (1, 2) backpressures bulk's partition of
+    the (0, 1) buffer; DECODE's window on (0, 1) survives, so the decode
+    flow still finishes near its weighted share — on the FIFO link the
+    same scenario head-of-line-blocks decode behind credit-starved bulk."""
+    def run(qos):
+        sim = FabricSim(Torus((8,)), qos=qos)
+        iso = FabricSim(Torus((8,)), qos=qos)
+        t_iso = iso.finish_s(iso.inject(0, 1, 2 << 20,
+                                        cls=TrafficClass.DECODE))
+        sim.inject(0, 2, 32 << 20, cls=TrafficClass.BULK)   # 0->1->2
+        sim.inject(1, 2, 32 << 20, cls=TrafficClass.BULK)   # merge at (1,2)
+        d = sim.inject(0, 1, 2 << 20, cls=TrafficClass.DECODE)
+        return sim.finish_s(d) / t_iso
+    assert run(QosPolicy()) <= 1.15
+    assert run(QosPolicy(single_class=True)) > 2.0
+
+
+def test_packets_never_exceed_class_credit_partition():
+    """A flow's packets must fit its class's credit window, or the channel
+    would deadlock head-of-line forever."""
+    sim = FabricSim(Torus((4,)), credit_bytes=8192, packet_bytes=8192,
+                    qos=QosPolicy())
+    # CONTROL partition = 10% of 8192 ~ 819 B; a 1 MB control flow must
+    # still complete (packets coarsen DOWN to the partition)
+    fid = sim.inject(0, 1, 1 << 20, cls=TrafficClass.CONTROL)
+    assert sim.finish_s(fid) > 0
+
+
+# ---------------------------------------------------------------------------
+# probe snapshot/restore (the deepcopy-ghost replacement)
+# ---------------------------------------------------------------------------
+
+def test_probe_leaves_future_bitwise_identical():
+    """Probing must not perturb ANYTHING: two sims with identical traffic,
+    one probed mid-stream, must finish every later flow at bitwise the
+    same times."""
+    def build():
+        s = FabricSim(Torus((4, 4)), qos=QosPolicy())
+        s.inject(0, 1, 8 << 20, cls=TrafficClass.BULK)
+        s.inject(1, 2, 4 << 20, cls=TrafficClass.DECODE)
+        return s
+    a, b = build(), build()
+    for _ in range(3):                     # repeated probes, same answer
+        pa = a.probe_route((0, 1), 1 << 20)
+    pb = a.probe_route((0, 4), 1 << 20)
+    assert pa > 0 and pb > 0
+    fa = a.inject(2, 3, 2 << 20, cls=TrafficClass.COLLECTIVE)
+    fb = b.inject(2, 3, 2 << 20, cls=TrafficClass.COLLECTIVE)
+    assert a.finish_s(fa) == b.finish_s(fb)
+    assert a.link_stats() == b.link_stats()
+
+
+def test_probe_restores_after_partial_run():
+    """Probe AFTER the timeline already ran some events (settled flows,
+    credits in flight) — state must still round-trip exactly."""
+    s = FabricSim(Torus((8,)))
+    done = s.inject(0, 1, 1 << 20)
+    s.finish_s(done)                       # heap drained once
+    s.advance(s.now + 1e-3)
+    pending = s.inject(2, 3, 4 << 20, start_s=s.now + 5e-3)
+    before = s.link_stats()
+    t0 = s.now
+    t = s.probe_route((2, 3), 1 << 20, start_s=t0)
+    assert t > 0
+    assert s.now == t0                     # probe did not move the clock
+    assert s.link_stats() == before
+    assert s.finish_s(pending) > t0 + 5e-3
+
+
+def test_best_route_unchanged_semantics_with_snapshot_probe():
+    t = Torus((4, 4))
+    s = FabricSim(t)
+    s.inject(0, 1, 64 << 20)
+    direct = s.probe_route(tuple(t.route(0, 1)), 4 << 20)
+    route, best = fabric.best_route(s, 0, 1, 4 << 20)
+    assert len(route) - 1 > 1 and best < direct
+
+
+# ---------------------------------------------------------------------------
+# multi-path striping
+# ---------------------------------------------------------------------------
+
+def test_striped_routes_shares_and_bias():
+    t = Torus((4, 4))
+    s = FabricSim(t)
+    plan = fabric.striped_routes(s, 0, 1, 4 << 20, k=3)
+    assert 1 <= len(plan) <= 3
+    assert sum(f for _, f in plan) == pytest.approx(1.0)
+    assert all(r[0] == 0 and r[-1] == 1 for r, _ in plan)
+    # hammer the direct link: its share must shrink below the others'
+    s.inject(0, 1, 64 << 20)
+    biased = dict()
+    for r, f in fabric.striped_routes(s, 0, 1, 4 << 20, k=3):
+        biased[r] = f
+    direct = tuple(t.route(0, 1))
+    if direct in biased:
+        assert biased[direct] <= min(f for r, f in biased.items()
+                                     if r != direct)
+    with pytest.raises(ValueError):
+        fabric.striped_routes(s, 0, 1, 1024, k=0)
+
+
+def test_stripe_counts_sum_exactly_with_remainders():
+    plan = [((0, 1), 0.5), ((0, 2, 1), 0.3), ((0, 3, 1), 0.2)]
+    for n in (0, 1, 2, 3, 7, 32, 101):
+        counts = fabric.stripe_counts(plan, n)
+        assert sum(counts) == n
+        assert all(c >= 0 for c in counts)
+    assert fabric.stripe_counts(plan, 1).count(1) == 1   # largest frac wins
+    with pytest.raises(ValueError):
+        fabric.stripe_counts(plan, -1)
+
+
+def test_striped_put_pages_beats_single_route():
+    """With spare capacity on the detour family, splitting the PUT across
+    k probed routes aggregates bandwidth: faster than the best single
+    route, even after the receiver's reorder/settle charge."""
+    t = Torus((4, 4))
+    nbytes_page = 1 << 20
+
+    def put(striped):
+        sim = FabricSim(t, packet_bytes=40960)
+        ep = RdmaEndpoint(t, 0, sim=sim)
+        region = ep.register(32 * nbytes_page)
+        pages = list(range(32))
+        if not striped:
+            route, _ = fabric.best_route(sim, 0, 1, 32 * nbytes_page)
+            sched = fabric.lower_route(t, route)
+            return ep.put_pages(1, region, pages, page_nbytes=nbytes_page,
+                                schedule=sched), ep.last_put_report
+        plan = fabric.striped_routes(sim, 0, 1, 32 * nbytes_page, k=3)
+        counts = fabric.stripe_counts(plan, 32)      # the production split
+        stripes = [(fabric.lower_route(t, r), c * nbytes_page)
+                   for (r, _), c in zip(plan, counts) if c > 0]
+        return ep.put_pages(1, region, pages, page_nbytes=nbytes_page,
+                            stripes=stripes), ep.last_put_report
+    t_single, single_rep = put(False)
+    t_striped, rep = put(True)
+    assert rep["stripes"] > 1
+    assert rep["settle_s"] > 0
+    # translation + host-IF DMA are fixed costs both variants pay; the
+    # WIRE leg is what striping parallelises (~k x)
+    assert rep["wire_s"] < 0.5 * single_rep["wire_s"]
+    assert t_striped < 0.8 * t_single
+    assert rep["total_s"] == t_striped
+
+
+def test_put_pages_rejects_bad_stripes():
+    t = Torus((4,))
+    ep = RdmaEndpoint(t, 0)
+    region = ep.register(8192)
+    sched = fabric.lower_p2p(t, 0, 1)
+    with pytest.raises(ValueError, match="not both"):
+        ep.put_pages(1, region, [0, 1], page_nbytes=4096, schedule=sched,
+                     stripes=[(sched, 8192)])
+    with pytest.raises(ValueError, match="stripe bytes"):
+        ep.put_pages(1, region, [0, 1], page_nbytes=4096,
+                     stripes=[(sched, 4096)])
+    with pytest.raises(ValueError, match="at least one"):
+        ep.put_pages(1, region, [0, 1], page_nbytes=4096, stripes=[])
+
+
+def test_striped_put_closed_form_without_sim():
+    """No sim attached: stripes price as max-of-legs + settle, and the
+    report still carries the stripe count."""
+    t = Torus((4,))
+    ep = RdmaEndpoint(t, 0)
+    region = ep.register(8192)
+    s1 = fabric.lower_route(t, (0, 1))
+    s2 = fabric.lower_route(t, (0, 3, 2, 1))
+    total = ep.put_pages(1, region, [0, 1], page_nbytes=4096,
+                         stripes=[(s1, 4096), (s2, 4096)])
+    rep = ep.last_put_report
+    assert rep["stripes"] == 2
+    assert total == rep["isolated_s"] == rep["total_s"]
+
+
+# ---------------------------------------------------------------------------
+# per-class accounting
+# ---------------------------------------------------------------------------
+
+def test_class_stats_conserve_bytes_per_class():
+    sim = FabricSim(Torus((8,)), qos=QosPolicy())
+    specs = [(0, 2, 1 << 20, TrafficClass.DECODE),
+             (3, 4, 2 << 20, TrafficClass.BULK),
+             (5, 6, 1 << 19, TrafficClass.COLLECTIVE)]
+    fids = [sim.inject(s, d, n, cls=c) for s, d, n, c in specs]
+    sim.run()
+    want = {c: 0.0 for c in TrafficClass}
+    for fid, (_, _, n, c) in zip(fids, specs):
+        want[c] += n * sim.flow(fid).hops    # every wire hop carries it
+    got = sim.class_stats()
+    for c in TrafficClass:
+        assert got[c] == pytest.approx(want[c])
+    # link_stats carries the per-class breakdown too
+    assert all(len(v["class_bytes"]) == len(TrafficClass)
+               for v in sim.link_stats().values())

@@ -1,0 +1,132 @@
+"""Property-based invariants for the QoS link arbiter (fabric/qos +
+FabricSim virtual channels), driven by hypothesis over random flow sets:
+
+  * **byte conservation per class**: every wire hop of every flow is
+    accounted to exactly its class — ``class_stats`` equals the per-class
+    sum of ``nbytes * hops`` no matter how flows interleave;
+  * **single_class ≡ FIFO**: under ``QosPolicy(single_class=True)`` (and
+    the default ``qos=None``) class tags are inert — any permutation of
+    tags over any flow set finishes bitwise identically;
+  * **no starvation**: under adversarial BULK load a DECODE flow still
+    completes within its weighted share of the link (bounded stretch),
+    and the BULK flows themselves all complete (work conservation — the
+    arbiter never idles a backlogged link);
+  * **weight tracking**: two saturating classes split a link's goodput in
+    proportion to their ``QosPolicy`` weights.
+"""
+import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from hypothesis import given, settings
+
+from repro.core.fabric import FabricSim, QosPolicy, TrafficClass
+from repro.core.topology import Torus
+
+CLASSES = list(TrafficClass)
+
+
+def _flow_specs(ring):
+    """(src, dst, nbytes, cls) with src != dst on a ``ring``-rank 1D torus."""
+    return st.lists(
+        st.tuples(st.integers(0, ring - 1), st.integers(1, ring - 1),
+                  st.integers(1, 1 << 18), st.sampled_from(CLASSES)),
+        min_size=1, max_size=8)
+
+
+def _inject_all(sim, specs):
+    return [sim.inject(s, (s + d) % sim.torus.size, n, cls=c)
+            for s, d, n, c in specs]
+
+
+# ---------------------------------------------------------------------------
+# byte conservation per class
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None)
+@given(specs=_flow_specs(8), single=st.booleans())
+def test_class_bytes_conserved(specs, single):
+    sim = FabricSim(Torus((8,)), qos=QosPolicy(single_class=single))
+    fids = _inject_all(sim, specs)
+    sim.run()
+    want = {c: 0.0 for c in TrafficClass}
+    for fid, (_, _, n, c) in zip(fids, specs):
+        want[c] += n * sim.flow(fid).hops
+    got = sim.class_stats()
+    for c in TrafficClass:
+        assert got[c] == pytest.approx(want[c]), c
+    # and the per-link totals agree with the per-class breakdown
+    for v in sim.link_stats().values():
+        assert sum(v["class_bytes"]) == pytest.approx(v["bytes"])
+
+
+# ---------------------------------------------------------------------------
+# single_class == the pre-QoS FIFO, for ANY flow set and ANY tagging
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None)
+@given(specs=_flow_specs(8), data=st.data())
+def test_single_class_invariant_under_tags(specs, data):
+    base = FabricSim(Torus((8,)))            # default: single-class FIFO
+    t_base = [base.finish_s(f) for f in _inject_all(base, specs)]
+    retag = data.draw(st.lists(st.sampled_from(CLASSES),
+                               min_size=len(specs), max_size=len(specs)))
+    retagged = [(s, d, n, c) for (s, d, n, _), c in zip(specs, retag)]
+    alt = FabricSim(Torus((8,)), qos=QosPolicy(single_class=True))
+    t_alt = [alt.finish_s(f) for f in _inject_all(alt, retagged)]
+    assert t_base == t_alt                   # bitwise identical
+
+
+# ---------------------------------------------------------------------------
+# no starvation under adversarial bulk load
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=25)
+@given(n_bulk=st.integers(1, 6),
+       bulk_mb=st.integers(1, 32),
+       decode_kb=st.integers(64, 2048))
+def test_decode_never_starved_by_bulk(n_bulk, bulk_mb, decode_kb):
+    """However much BULK backlog shares the link, DECODE's stretch is
+    bounded by the inverse of its weighted share (+ slack for packet
+    granularity) — starvation would blow this bound immediately."""
+    policy = QosPolicy()
+    w = policy.weights
+    share = w[TrafficClass.DECODE] / (w[TrafficClass.DECODE]
+                                      + w[TrafficClass.BULK])
+    iso = FabricSim(Torus((8,)), qos=policy)
+    t_iso = iso.finish_s(iso.inject(0, 1, decode_kb << 10,
+                                    cls=TrafficClass.DECODE))
+    sim = FabricSim(Torus((8,)), qos=policy)
+    bulks = [sim.inject(0, 1, bulk_mb << 20, cls=TrafficClass.BULK)
+             for _ in range(n_bulk)]
+    d = sim.inject(0, 1, decode_kb << 10, cls=TrafficClass.DECODE)
+    t_d = sim.finish_s(d)
+    assert t_d <= t_iso / share * 1.25 + 1e-4
+    for b in bulks:                          # bulk completes too
+        assert sim.finish_s(b) < float("inf")
+
+
+# ---------------------------------------------------------------------------
+# goodput shares track the policy weights
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=25)
+@given(w_hi=st.integers(2, 32), w_lo=st.integers(1, 8),
+       cls_pair=st.sampled_from([(TrafficClass.DECODE, TrafficClass.BULK),
+                                 (TrafficClass.COLLECTIVE,
+                                  TrafficClass.BULK),
+                                 (TrafficClass.DECODE,
+                                  TrafficClass.COLLECTIVE)]))
+def test_throughput_ratio_tracks_weights(w_hi, w_lo, cls_pair):
+    hi, lo = cls_pair
+    hp.assume(w_hi > w_lo)
+    policy = QosPolicy(weights={hi: float(w_hi), lo: float(w_lo)})
+    sim = FabricSim(Torus((4,)), qos=policy)
+    n = 8 << 20
+    f_hi = sim.inject(0, 1, n, cls=hi)
+    sim.inject(0, 1, n, cls=lo)
+    t_hi = sim.finish_s(f_hi)
+    share = n / t_hi / sim.link_bw
+    want = w_hi / (w_hi + w_lo)
+    assert share == pytest.approx(want, rel=0.10)

@@ -344,6 +344,78 @@ def test_congestion_aware_migration_beats_hop_count(dense_model, rng):
     assert cl_cong.finished[0].out_tokens == baseline
 
 
+def test_striped_migration_bitwise_and_reported(dense_model, rng):
+    """``route_policy="striped"`` splits the PUT across several probed
+    routes (multi-path bulk striping) — decode must still resume with
+    bitwise-identical tokens, and the report must carry the stripe count
+    and the striped price."""
+    cfg, params = dense_model
+    prompt = rng.integers(0, cfg.vocab, size=(9,)).astype(np.int32)
+    baseline = _decode_alone(cfg, params, prompt, max_new=8)
+
+    cl = ServingCluster(cfg, params, torus=Torus((4, 4)),
+                        node_ranks=(0, 5), max_batch=2, max_seq=64,
+                        page_tokens=8, qos=fabric.QosPolicy())
+    cl.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+    for _ in range(4):
+        cl.step()
+    rep = cl.migrate(0, 5, route_policy="striped")
+    assert rep.route_policy == "striped"
+    assert rep.stripes > 1                 # genuinely multi-path
+    assert rep.nbytes == rep.n_pages * 8 * cl.nodes[0].lm.bytes_per_token
+    cl.run_to_completion()
+    assert cl.finished[0].out_tokens == baseline
+    assert cl.stats()["n_migrations"] == 1
+
+
+def test_fail_link_relowers_decode_tp_twin(dense_model):
+    """fail_link must re-lower every node's decode TP twin through
+    fabric.rewrite: the per-step TP flows then price the detoured ring
+    honestly (explicit detour hops + higher predicted cost), and
+    clear_faults restores the healthy twin."""
+    cfg, params = dense_model
+    cl = ServingCluster(cfg, params, torus=Torus((4,)), node_ranks=(0, 1),
+                        max_batch=2, max_seq=64, page_tokens=8,
+                        tp_axes=None)
+    lm = cl.nodes[0].lm
+    healthy = lm.tp_schedule
+    pred_healthy = lm.predicted_tp_comm_s
+    assert healthy.max_hops == 1
+    cl.fail_link(0, 1)
+    assert lm.tp_schedule.max_hops == 3    # the ring detour, annotated
+    assert lm.predicted_tp_comm_s > pred_healthy
+    assert lm.tp_schedule.faults           # carries the fault map
+    cl.clear_faults()
+    assert lm.tp_schedule == healthy
+    assert lm.predicted_tp_comm_s == pytest.approx(pred_healthy)
+
+
+def test_qos_cluster_protects_decode_from_migration_bulk(dense_model, rng):
+    """End-to-end decode protection: the same migrate-under-decode
+    scenario as test_migration_contends_with_live_decode, but on a
+    QoS-enabled cluster — the decode TP flows (DECODE class) must stretch
+    LESS against the BULK migration than on the FIFO cluster, and tokens
+    stay bitwise identical."""
+    cfg, params = dense_model
+    prompt = rng.integers(0, cfg.vocab, size=(9,)).astype(np.int32)
+    baseline = _decode_alone(cfg, params, prompt, max_new=8)
+
+    def run(qos):
+        cl = _cluster(cfg, params, tp_axes=None, net=_slow_net(),
+                      sim_kw=_SLOW_SIM_KW, qos=qos)
+        cl.submit(Request(rid=7, prompt=prompt, max_new_tokens=8))
+        for _ in range(4):
+            cl.step()
+        cl.migrate(7, 1)
+        cl.run_to_completion()
+        assert cl.finished[0].out_tokens == baseline
+        return cl.stats()["nodes"][0]["sim_tp_comm_s"]
+
+    tp_fifo = run(None)
+    tp_qos = run(fabric.QosPolicy())
+    assert 0 < tp_qos < tp_fifo            # decode comm protected
+
+
 def test_migrate_rejects_unknown_route_policy(dense_model, rng):
     cfg, params = dense_model
     cl = _cluster(cfg, params)
