@@ -4,6 +4,8 @@
   PYTHONPATH=src python -m benchmarks.run latency    # one bench
   PYTHONPATH=src python -m benchmarks.run --only contention   # same, for
                                                      # fast local iteration
+  PYTHONPATH=src python -m benchmarks.run --profile contention  # + cProfile
+                                                     # top-20 per module
 
 Each module exposes ``run() -> [rows]`` and ``check(rows) -> [errors]``;
 check() validates the paper's quantitative claims against our model and the
@@ -29,7 +31,7 @@ import time
 
 MODULES = ["apelink_eff", "dma_overlap", "tlb", "latency", "bandwidth",
            "fabric_cost", "overlap", "migration", "contention", "qos",
-           "lofamo", "nextgen", "roofline"]
+           "lofamo", "nextgen", "roofline", "simscale"]
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -84,6 +86,9 @@ def write_snapshot(names, rows, timings, errors) -> str | None:
 
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
+    profile = "--profile" in argv
+    if profile:
+        argv.remove("--profile")
     if "--only" in argv:
         # --only <module>: run exactly one module (fast local iteration);
         # equivalent to the positional form but self-documenting in CI logs
@@ -109,8 +114,19 @@ def main(argv=None) -> int:
     for name in names:
         mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.perf_counter()
-        rows = mod.run()
-        dt = time.perf_counter() - t0
+        if profile:
+            # per-module hot-spot profile: where does the bench's wall
+            # time actually go (the sim event loop? route BFS? jit?)
+            import cProfile
+            import pstats
+            prof = cProfile.Profile()
+            rows = prof.runcall(mod.run)
+            dt = time.perf_counter() - t0
+            print(f"--- profile: {name} (top 20 by cumulative time) ---")
+            pstats.Stats(prof).sort_stats("cumulative").print_stats(20)
+        else:
+            rows = mod.run()
+            dt = time.perf_counter() - t0
         timings[name] = dt
         errs = mod.check(rows) if hasattr(mod, "check") else []
         all_rows += rows

@@ -1,0 +1,185 @@
+"""Fluid-tier scale benchmark — the petaflops-class regime the paper
+aims APEnet+ at (hundreds of nodes on a 3D torus, arXiv:1102.3796's
+aggregate-bandwidth-vs-concurrent-flows framing).
+
+Two claims, both on ``fabric.make_sim`` fidelity tiers:
+
+1. **``fluid_speedup_512``** (gated, higher-is-better): the flow-level
+   fluid tier settles a 512-node (8x8x8) torus carrying 2000 concurrent
+   multi-class flows >= 50x faster than the packet-level oracle on the
+   identical workload.  This is the wall-clock lever that makes the
+   design-space autotuner and cluster-scale trace replay affordable.
+
+2. **``fluid_sched_maxerr`` / ``hybrid_sched_maxerr``** (gated,
+   lower-is-better): on the random-schedule differential suite (random
+   1D/2D/3D collectives with QoS tags — the workloads every consumer
+   actually prices), fluid and hybrid completion times stay within 10%
+   of the packet oracle.
+
+The packet run doubles as the deadlock-recovery regression: at this
+scale the partitioned multi-class credits form cyclic buffer waits that
+the escape-credit recovery (``FabricSim._unstick``) must resolve — the
+run must finish every flow (``packet_unfinished`` == 0).
+
+``SIMSCALE_FAST=1`` (the CI fast lane) skips the ~90 s packet baseline:
+the fluid 512-node run and the schedule differential still execute, and
+``check`` enforces an absolute wall budget on the fluid smoke.  The
+differential suite is identical in both lanes, so its gated metrics
+diff cleanly across fast/full snapshots.
+"""
+from __future__ import annotations
+
+import os
+import random
+import time
+
+from repro.core import fabric
+from repro.core.fabric.fluid import make_sim
+from repro.core.fabric.qos import QosPolicy, TrafficClass
+from repro.core.topology import Torus
+
+DIMS = (8, 8, 8)             # 512 nodes
+N_FLOWS = 2000
+SEED = 0
+FLUID_BUDGET_MS = 15000.0    # fast-lane wall budget for the fluid smoke
+
+# random-schedule differential suite: small meshes where the packet
+# oracle is cheap, every collective kind, mixed sizes/classes/QoS
+_MESHES = [(8,), (2, 4), (2, 2, 2), (4, 4), (2, 2, 4)]
+_SIZES = [32 * 1024, 256 * 1024, 1 << 20, 4 << 20]
+_DIFF_TRIALS = 40
+
+
+def _workload(rng: random.Random):
+    """2000 multi-class flows, 64 KB..2 MB, staggered starts — the
+    trace-replay shape (same generator in fluid and packet runs)."""
+    n = 1
+    for d in DIMS:
+        n *= d
+    flows = []
+    for _ in range(N_FLOWS):
+        src = rng.randrange(n)
+        dst = rng.randrange(n)
+        while dst == src:
+            dst = rng.randrange(n)
+        nbytes = rng.randint(64 * 1024, 2 * 1024 * 1024)
+        cls = rng.choice(list(TrafficClass))
+        start = rng.randint(0, 4) * 200e-6
+        flows.append((src, dst, nbytes, cls, start))
+    return flows
+
+
+def _run_tier(fidelity: str, flows) -> tuple[float, object]:
+    torus = Torus(DIMS)
+    fabric.clear_route_cache()
+    t0 = time.perf_counter()
+    sim = make_sim(torus, fidelity=fidelity, qos=QosPolicy())
+    for src, dst, nbytes, cls, start in flows:
+        sim.inject(src, dst, nbytes, cls=cls, start_s=start)
+    sim.run()
+    return time.perf_counter() - t0, sim
+
+
+def _schedule_differential() -> tuple[float, float]:
+    """(fluid_maxerr, hybrid_maxerr) vs the packet oracle over random
+    collective schedules — deterministic (fixed seed), identical in the
+    fast and full lanes."""
+    kinds = [fabric.AR, fabric.AG, fabric.RS, fabric.A2A, fabric.HALO]
+    rng = random.Random(7)
+    worst_f = worst_h = 0.0
+    for _ in range(_DIFF_TRIALS):
+        dims = rng.choice(_MESHES)
+        torus = Torus(dims)
+        kind = rng.choice(kinds)
+        # all_to_all / halo_exchange lower along a single axis only
+        axes = ((rng.randrange(len(dims)),)
+                if kind in (fabric.A2A, fabric.HALO)
+                else tuple(range(len(dims))))
+        sched = fabric.lower(kind, torus, axes)
+        nbytes = rng.choice(_SIZES)
+        kw = dict(backend="sim", cls=rng.choice(list(TrafficClass)))
+        if rng.random() < 0.5:
+            kw["qos"] = QosPolicy()
+        p = fabric.estimate(sched, nbytes, fidelity="packet", **kw).total_s
+        f = fabric.estimate(sched, nbytes, fidelity="fluid", **kw).total_s
+        h = fabric.estimate(sched, nbytes, fidelity="hybrid", **kw).total_s
+        worst_f = max(worst_f, abs(f - p) / p)
+        worst_h = max(worst_h, abs(h - p) / p)
+    return worst_f, worst_h
+
+
+def run() -> list[dict]:
+    fast = os.environ.get("SIMSCALE_FAST", "0") == "1"
+    flows = _workload(random.Random(SEED))
+
+    fluid_dt, fsim = _run_tier("fluid", flows)
+    rows = [
+        {"bench": "simscale", "metric": "fluid_wall_ms",
+         "value": fluid_dt * 1e3,
+         "note": f"{len(DIMS)}D torus {DIMS}, {N_FLOWS} flows, fluid tier "
+                 f"({fsim.n_solves} rate solves); fast-lane budget "
+                 f"{FLUID_BUDGET_MS:.0f} ms"},
+        {"bench": "simscale", "metric": "fluid_solves",
+         "value": float(fsim.n_solves),
+         "note": "rate-allocation solver invocations (event batches)"},
+    ]
+
+    if not fast:
+        packet_dt, psim = _run_tier("packet", flows)
+        unfinished = sum(1 for f in psim._flows.values()
+                         if f.finish_s is None)
+        rows += [
+            {"bench": "simscale", "metric": "packet_wall_s",
+             "value": packet_dt,
+             "note": "identical workload on the packet oracle"},
+            {"bench": "simscale", "metric": "fluid_speedup_512",
+             "value": packet_dt / fluid_dt, "gate": "higher",
+             "note": "packet wall / fluid wall on the 512-node 2000-flow "
+                     "workload (bar: >= 50x)"},
+            {"bench": "simscale", "metric": "packet_unfinished",
+             "value": float(unfinished),
+             "note": "flows never completed (0 = credit-deadlock "
+                     "recovery held)"},
+            {"bench": "simscale", "metric": "packet_deadlock_breaks",
+             "value": float(psim.deadlock_breaks),
+             "note": "escape-credit recoveries during the packet run"},
+        ]
+
+    err_f, err_h = _schedule_differential()
+    rows += [
+        {"bench": "simscale", "metric": "fluid_sched_maxerr",
+         "value": err_f, "gate": "lower",
+         "note": "max |fluid - packet|/packet over the random-schedule "
+                 "suite (bar: <= 0.10)"},
+        {"bench": "simscale", "metric": "hybrid_sched_maxerr",
+         "value": err_h, "gate": "lower",
+         "note": "max |hybrid - packet|/packet over the random-schedule "
+                 "suite (bar: <= 0.10)"},
+    ]
+    return rows
+
+
+def check(rows) -> list[str]:
+    vals = {r["metric"]: r["value"] for r in rows}
+    errs = []
+    if vals["fluid_wall_ms"] > FLUID_BUDGET_MS:
+        errs.append(f"fluid 512-node smoke took {vals['fluid_wall_ms']:.0f} "
+                    f"ms, over the {FLUID_BUDGET_MS:.0f} ms budget")
+    if "fluid_speedup_512" in vals and vals["fluid_speedup_512"] < 50.0:
+        errs.append(f"fluid tier only {vals['fluid_speedup_512']:.1f}x "
+                    "faster than packet on the 512-node workload "
+                    "(bar: 50x)")
+    if vals.get("packet_unfinished", 0.0) != 0.0:
+        errs.append(f"{vals['packet_unfinished']:.0f} flows never finished "
+                    "on the packet oracle (credit-deadlock recovery "
+                    "failed)")
+    for m in ("fluid_sched_maxerr", "hybrid_sched_maxerr"):
+        if vals[m] > 0.10:
+            errs.append(f"{m} = {vals[m]:.3f} exceeds the 10% "
+                        "fluid-vs-packet differential contract")
+    return errs
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['bench']},{r['metric']},{r['value']}")

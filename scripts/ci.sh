@@ -43,9 +43,9 @@ if [ "$LANE" = "full" ]; then
 else
     echo "[ci] tier-1 tests (fast lane: -m 'not slow', small hypothesis budget)"
     HYPOTHESIS_PROFILE=ci python -m pytest -x -q -m "not slow"
-    echo "[ci] benchmarks (quick set)"
-    python -m benchmarks.run overlap dma_overlap fabric_cost migration \
-        contention qos
+    echo "[ci] benchmarks (quick set; simscale smoke skips the packet baseline)"
+    SIMSCALE_FAST=1 python -m benchmarks.run overlap dma_overlap fabric_cost \
+        migration contention qos simscale
 fi
 
 echo "[ci] bench regression gate"

@@ -20,10 +20,18 @@ consumes schedules directly.
 ``FabricSim`` carries per-class virtual channels drained by a
 class-weighted arbiter with partitioned credits, so latency-critical
 DECODE flows are protected from BULK migrations sharing their links.
+
+``fabric.fluid`` adds the flow-level fast fidelity tier on top:
+``make_sim(..., fidelity="packet"|"fluid"|"hybrid")`` builds the packet
+oracle, the O(flows) fluid simulator (vectorized max-min rate
+allocation) or the hybrid (fluid with packet escalation of contended
+links) behind the same duck-typed surface.
 """
 from repro.core.fabric.cost import (BACKENDS, CostEstimate, OverlapEstimate,
                                     algorithmic_bandwidth, estimate,
                                     estimate_overlapped, message_time)
+from repro.core.fabric.fluid import (FIDELITIES, FluidSim, HybridSim,
+                                     make_sim)
 from repro.core.fabric.execute import (execute, execute_all_gather,
                                        execute_all_reduce,
                                        execute_all_to_all,
@@ -43,9 +51,9 @@ from repro.core.fabric.schedule import (A2A, AG, AR, HALO, P2P, RS, Bucket,
 from repro.core.fabric.qos import (DEFAULT_CREDIT_FRAC, DEFAULT_WEIGHTS,
                                    SINGLE_CLASS, QosPolicy, TrafficClass)
 from repro.core.fabric.sim import (FabricSim, FlowResult, best_route,
-                                   candidate_routes, inject_schedule,
-                                   simulate_schedule, stripe_counts,
-                                   striped_routes)
+                                   candidate_routes, clear_route_cache,
+                                   inject_schedule, simulate_schedule,
+                                   stripe_counts, striped_routes)
 
 __all__ = [
     "A2A", "AG", "AR", "HALO", "P2P", "RS",
@@ -61,8 +69,9 @@ __all__ = [
     "lower_all_reduce", "lower_all_to_all", "lower_halo_exchange",
     "lower_p2p", "lower_reduce_scatter", "lower_route", "plan_buckets",
     "FabricSim", "FlowResult", "best_route", "candidate_routes",
-    "inject_schedule", "simulate_schedule", "stripe_counts",
-    "striped_routes",
+    "clear_route_cache", "inject_schedule", "simulate_schedule",
+    "stripe_counts", "striped_routes",
+    "FIDELITIES", "FluidSim", "HybridSim", "make_sim",
     "DEFAULT_CREDIT_FRAC", "DEFAULT_WEIGHTS", "SINGLE_CLASS", "QosPolicy",
     "TrafficClass",
 ]

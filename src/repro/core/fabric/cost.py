@@ -47,11 +47,13 @@ def message_time(nbytes: int, net: NetModel | None = None, *,
 
 
 BACKENDS = ("analytic", "sim")
+FIDELITIES = ("packet", "fluid", "hybrid")
 
 
 def estimate(schedule: CollectiveSchedule, nbytes: int,
              net: NetModel | None = None, *, backend: str = "analytic",
-             cls=None, **endpoint_kw) -> CostEstimate:
+             fidelity: str = "packet", cls=None,
+             **endpoint_kw) -> CostEstimate:
     """Predicted completion time for the collective on an ``nbytes`` input
     (bytes of the per-rank input buffer, matching the transfers' ``frac``
     base).
@@ -68,15 +70,25 @@ def estimate(schedule: CollectiveSchedule, nbytes: int,
     ``cls`` tags the traffic class (``fabric.qos.TrafficClass``) of the
     sim backend's flows; the analytic model ignores it — class weights
     only matter under contention, which the closed form never prices.
+
+    ``fidelity`` selects the sim backend's simulator tier:
+    ``"packet"`` (the bitwise oracle — the default), ``"fluid"``
+    (flow-level rate allocation, O(flows) events — the fast path for
+    large tori) or ``"hybrid"`` (fluid with packet-mode escalation of
+    contended links).  The analytic backend ignores it.
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown cost backend {backend!r}; "
                          f"expected one of {BACKENDS}")
+    if fidelity not in FIDELITIES:
+        raise ValueError(f"unknown sim fidelity {fidelity!r}; "
+                         f"expected one of {FIDELITIES}")
     if backend == "sim":
         from repro.core.fabric import sim as _sim
         if cls is not None:
             endpoint_kw["cls"] = cls
-        return _sim.simulate_schedule(schedule, nbytes, net, **endpoint_kw)
+        return _sim.simulate_schedule(schedule, nbytes, net,
+                                      fidelity=fidelity, **endpoint_kw)
     net = net or NetModel()
     phase_s = []
     for ph in schedule.phases:
@@ -148,6 +160,7 @@ def estimate_overlapped(schedule: CollectiveSchedule,
                         queue_depth: int = 2,
                         issue_gap_s: float = 0.85e-6,
                         backend: str = "analytic",
+                        fidelity: str = "packet",
                         cls=None, **endpoint_kw) -> OverlapEstimate:
     """Price a bucketed, compute-overlapped execution of ``schedule``.
 
@@ -162,8 +175,9 @@ def estimate_overlapped(schedule: CollectiveSchedule,
     exactly like the second DMA engine of §2.1; a depth-1 queue pays
     ``issue_gap_s`` per bucket.  The sequential baseline is the monolithic
     post-backward barrier: all compute, then ONE schedule moving the whole
-    payload.  ``backend`` selects how each bucket's wire time is priced
-    (see ``estimate``); the timeline algebra on top is backend-agnostic.
+    payload.  ``backend`` (and, for the sim backend, ``fidelity``) selects
+    how each bucket's wire time is priced (see ``estimate``); the timeline
+    algebra on top is backend-agnostic.
     """
     net = net or NetModel()
     nbytes = (tuple(buckets.bucket_nbytes)
@@ -180,8 +194,8 @@ def estimate_overlapped(schedule: CollectiveSchedule,
         if len(comp) != nb:
             raise ValueError(
                 f"compute trace has {len(comp)} segments for {nb} buckets")
-    comm = tuple(estimate(schedule, b, net, backend=backend, cls=cls,
-                          **endpoint_kw).total_s
+    comm = tuple(estimate(schedule, b, net, backend=backend,
+                          fidelity=fidelity, cls=cls, **endpoint_kw).total_s
                  for b in nbytes)
     compute_total = sum(comp)
     t = 0.0            # fabric busy-until
@@ -202,8 +216,8 @@ def estimate_overlapped(schedule: CollectiveSchedule,
     busy = sum(comm) + sum(gaps)
     hidden = max(0.0, busy - exposed)
     seq = (compute_total + issue_gap_s
-           + estimate(schedule, sum(nbytes), net, backend=backend, cls=cls,
-                      **endpoint_kw).total_s
+           + estimate(schedule, sum(nbytes), net, backend=backend,
+                      fidelity=fidelity, cls=cls, **endpoint_kw).total_s
            if nbytes else compute_total)
     return OverlapEstimate(
         total_s=total_s, sequential_s=seq, compute_s=compute_total,

@@ -81,6 +81,85 @@ DEFAULT_PACKET_BYTES = 4096
 DEFAULT_MAX_PACKETS = 256
 
 
+def link_key(torus: Torus, u: int, v: int, channel: int) -> tuple:
+    """Physical cable identity of the hop u -> v.
+
+    Every node wires BOTH ports of each dimension (6 links per node on a
+    3D torus), so the +1 and -1 traversal directions are distinct cables
+    even when they join the same rank pair — which happens exactly on
+    2-rings, where the dual-DMA round's two transfers ride the two
+    parallel cables concurrently (the analytic model's disjoint-directions
+    rule).  For rings > 2 the direction is implied by the coordinates; on
+    a 2-ring the flow's ``channel`` hint disambiguates.  Shared by the
+    packet tier (``FabricSim``) and the fluid tier (``fluid.FluidSim``) so
+    both fidelity tiers agree on what "one link" is.
+    """
+    cu, cv = torus.coords(u), torus.coords(v)
+    for d, (a, b) in enumerate(zip(cu, cv)):
+        if a != b:
+            n = torus.dims[d]
+            if n == 2:
+                return (u, v, channel & 1)
+            return (u, v, 0 if (b - a) % n == 1 else 1)
+    return (u, v, 0)   # self-link (unused)
+
+
+def packetize(nbytes: float, cap: float, packet_bytes: float,
+              max_packets: int) -> tuple[float, int]:
+    """Packet size/count for a flow whose class credit partition is
+    ``cap`` — a packet larger than its partition could never be granted
+    credit.  The fluid tier reuses this to derive its per-flow arbiter
+    weight and store-and-forward tail, so the two tiers price the same
+    packetization."""
+    if nbytes <= 0:
+        return 0.0, 1
+    pkt = float(min(packet_bytes, int(cap) or 1))
+    npkts = -(-nbytes // pkt)
+    if npkts > max_packets:
+        pkt = min(nbytes / max_packets, cap)
+    return pkt, int(-(-nbytes // pkt))
+
+
+# ----------------------------------------------------------------------------
+# fault-epoch route caching
+#
+# Repeated probes, re-striping and schedule injections recompute identical
+# BFS detours: the fault map only changes at fault *epochs* (fail_link /
+# clear_faults), yet every ``probe_route`` -> ``candidate_routes`` walk and
+# every fault-routed ``inject`` re-ran the BFS from scratch.  Both caches
+# key on the full (torus dims, src, dst, FaultMap) value — FaultMap is a
+# frozen dataclass of frozensets, so a *new* epoch is a new key and stale
+# hits are impossible; ``clear_route_cache`` (called by the serving
+# cluster's fail_link/clear_faults) drops the dead epoch's entries so the
+# caches stay bounded by the live epoch's working set.
+# ----------------------------------------------------------------------------
+
+_ROUTE_CACHE_CAP = 65536
+_bfs_cache: dict = {}
+_candidates_cache: dict = {}
+_MISS = object()
+
+
+def clear_route_cache() -> None:
+    """Invalidate the per-fault-epoch route caches (BFS paths and
+    candidate detour families).  Callers that mutate the fault world —
+    ``ServingCluster.fail_link``/``clear_faults`` — invoke this so the
+    previous epoch's entries are released."""
+    _bfs_cache.clear()
+    _candidates_cache.clear()
+
+
+def _cached_bfs(torus: Torus, src: int, dst: int,
+                faults: FaultMap) -> list[int] | None:
+    key = (torus.dims, src, dst, faults)
+    hit = _bfs_cache.get(key, _MISS)
+    if hit is _MISS:
+        if len(_bfs_cache) >= _ROUTE_CACHE_CAP:
+            _bfs_cache.clear()
+        hit = _bfs_cache[key] = _bfs_path(torus, src, dst, faults)
+    return hit
+
+
 class _Link:
     """One directed link (or host-IF resource): per-class virtual-channel
     FIFOs + partitioned credit windows, drained by the weighted arbiter."""
@@ -145,6 +224,30 @@ class _Flow:
         self.label = ""
         self.cls: TrafficClass | None = None  # traffic class tag
         self.cidx = 0                    # virtual-channel index under policy
+
+
+class _Journal:
+    """Copy-on-write undo log for ``probe_route``: instead of snapshotting
+    the whole sim up front, the probe records each link/flow/packet's
+    state the FIRST time the ghost traffic touches it.  Rolling back
+    therefore costs O(state the probe actually perturbed) — the candidate
+    route's links plus the flows crossing them — not O(resident sim),
+    which is the difference between O(k · route) and O(k · cluster) when
+    probing k candidates on a 512-node serving timeline."""
+
+    __slots__ = ("links", "flows", "pkts", "heap", "frontier", "seq_n",
+                 "fid_n", "stale")
+
+    def __init__(self, heap: list, frontier: float, seq_n: int, fid_n: int,
+                 stale: int) -> None:
+        self.links: dict = {}        # key -> saved field tuple | None (new)
+        self.flows: dict = {}        # fid -> saved mutable fields
+        self.pkts: dict = {}         # id(pkt) -> (pkt, hop, prev)
+        self.heap = heap             # heap list copied eagerly (events are
+        self.frontier = frontier     # tuples; mutable pkts inside are
+        self.seq_n = seq_n           # journalled at their mutation site)
+        self.fid_n = fid_n
+        self.stale = stale
 
 
 @dataclasses.dataclass(frozen=True)
@@ -216,6 +319,10 @@ class FabricSim:
         self._seq_n = 0          # event tie-break counter (plain int so
         self._fid_n = 0          # probe snapshots can restore it exactly)
         self._frontier = 0.0
+        self._stale = 0          # superseded retry events still in the heap
+        self._journal: _Journal | None = None   # active probe journal
+        self.last_probe_report: dict | None = None
+        self.deadlock_breaks = 0   # escape-credit recoveries (see _unstick)
 
     # -- clock ----------------------------------------------------------------
     @property
@@ -230,25 +337,8 @@ class FabricSim:
 
     # -- link identity --------------------------------------------------------
     def _link_key(self, u: int, v: int, channel: int) -> tuple:
-        """Physical cable identity of the hop u -> v.
-
-        Every node wires BOTH ports of each dimension (6 links per node on
-        a 3D torus), so the +1 and -1 traversal directions are distinct
-        cables even when they join the same rank pair — which happens
-        exactly on 2-rings, where the dual-DMA round's two transfers ride
-        the two parallel cables concurrently (the analytic model's
-        disjoint-directions rule).  For rings > 2 the direction is
-        implied by the coordinates; on a 2-ring the flow's ``channel``
-        hint disambiguates.
-        """
-        cu, cv = self.torus.coords(u), self.torus.coords(v)
-        for d, (a, b) in enumerate(zip(cu, cv)):
-            if a != b:
-                n = self.torus.dims[d]
-                if n == 2:
-                    return (u, v, channel & 1)
-                return (u, v, 0 if (b - a) % n == 1 else 1)
-        return (u, v, 0)   # self-link (unused)
+        """Physical cable identity of the hop u -> v (see ``link_key``)."""
+        return link_key(self.torus, u, v, channel)
 
     # -- injection ------------------------------------------------------------
     def _resolve_route(self, src: int, dst: int,
@@ -262,7 +352,7 @@ class FabricSim:
             return (src,)
         if not self.faults:
             return tuple(self.torus.route(src, dst))
-        path = _bfs_path(self.torus, src, dst, self.faults)
+        path = _cached_bfs(self.torus, src, dst, self.faults)
         if path is None:
             raise UnroutableError(
                 f"no surviving route {src} -> {dst} in the simulated fabric")
@@ -270,15 +360,8 @@ class FabricSim:
 
     def _packetize(self, nbytes: float, cap: float) -> tuple[float, int]:
         """Packet size/count for a flow whose class credit partition is
-        ``cap`` — a packet larger than its partition could never be
-        granted credit."""
-        if nbytes <= 0:
-            return 0.0, 1
-        pkt = float(min(self.packet_bytes, int(cap) or 1))
-        npkts = -(-nbytes // pkt)
-        if npkts > self.max_packets:
-            pkt = min(nbytes / self.max_packets, cap)
-        return pkt, int(-(-nbytes // pkt))
+        ``cap`` (see module-level ``packetize``)."""
+        return packetize(nbytes, cap, self.packet_bytes, self.max_packets)
 
     def _new_flow(self, start_s: float | None,
                   after: Sequence[int]) -> _Flow:
@@ -289,6 +372,7 @@ class FabricSim:
         for dep_fid in after:
             dep = self._flows[dep_fid]
             if dep.finish_s is None:
+                self._j_flow(dep)
                 dep.dependents.append(f.fid)
                 f.pending += 1
             else:
@@ -363,12 +447,55 @@ class FabricSim:
     def _push(self, t: float, kind: str, arg) -> None:
         heapq.heappush(self._heap, (t, self._seq_n, kind, arg))
         self._seq_n += 1
+        if self._stale > 64 and self._stale * 2 > len(self._heap) \
+                and self._journal is None:
+            self._compact()
+
+    def _compact(self) -> None:
+        """Drop provably superseded retry events (an earlier wake than the
+        link's pending ``retry_at`` is a ghost: when popped it finds the
+        link still busy and no-ops).  Long workloads with same-instant
+        credit returns accumulate these; compacting lazily once they
+        exceed half the heap keeps the heap bounded by live events
+        without changing any processing order."""
+        live = []
+        for ev in self._heap:
+            if ev[2] == "retry":
+                link = self._links.get(ev[3])
+                if link is not None and link.retry_at is not None \
+                        and ev[0] < link.retry_at:
+                    continue
+            live.append(ev)
+        self._heap = live
+        heapq.heapify(live)
+        self._stale = 0
 
     def _link(self, key) -> _Link:
         link = self._links.get(key)
+        j = self._journal
+        if j is not None and key not in j.links:
+            # first touch under an active probe: record the pre-image
+            j.links[key] = None if link is None else (
+                link.free_at, tuple(list(q) for q in link.queues),
+                list(link.credits), list(link.vtime), link.vfloor,
+                link.busy_s, link.bytes_carried, list(link.class_bytes),
+                link.retry_at)
         if link is None:
             link = self._links[key] = _Link(self._class_credits)
         return link
+
+    def _j_flow(self, f: _Flow) -> None:
+        """Journal a pre-existing flow's mutable fields on first touch."""
+        j = self._journal
+        if j is not None and f.fid < j.fid_n and f.fid not in j.flows:
+            j.flows[f.fid] = (f.sent, f.arrived, f.req_start, f.start_s,
+                              f.finish_s, f.pending, list(f.dependents))
+
+    def _j_pkt(self, p: _Pkt) -> None:
+        """Journal a pre-existing packet's routing fields on first touch."""
+        j = self._journal
+        if j is not None and p.fid < j.fid_n and id(p) not in j.pkts:
+            j.pkts[id(p)] = (p, p.hop, p.prev)
 
     def _enqueue(self, key, pkt: _Pkt, now: float) -> None:
         link = self._link(key)
@@ -409,6 +536,11 @@ class FabricSim:
                 # will do anyway
                 if link.retry_at is None or link.retry_at > link.free_at \
                         or link.retry_at <= now:
+                    if link.retry_at is not None:
+                        # the old retry event is now a superseded ghost
+                        # still sitting in the heap — count it so
+                        # ``_compact`` knows when ghosts dominate
+                        self._stale += 1
                     self._push(link.free_at, "retry", key)
                     link.retry_at = link.free_at
                 return
@@ -451,6 +583,7 @@ class FabricSim:
         One packet per flow sits at the link head at a time, so each
         virtual channel round-robins its concurrent flows at packet
         granularity; ``pace_s`` throttles GPU-outbound sources."""
+        self._j_flow(flow)
         idx = flow.sent
         flow.sent += 1
         last = flow.npkts - 1
@@ -465,10 +598,12 @@ class FabricSim:
             self._enqueue(key, pkt, now)
 
     def _finish_flow(self, flow: _Flow, t: float) -> None:
+        self._j_flow(flow)
         flow.finish_s = t
         self._frontier = max(self._frontier, t)
         for dep_fid in flow.dependents:
             dep = self._flows[dep_fid]
+            self._j_flow(dep)
             dep.pending -= 1
             dep.req_start = max(dep.req_start, t)
             if dep.pending == 0:
@@ -476,6 +611,7 @@ class FabricSim:
         flow.dependents = []
 
     def _start_flow(self, flow: _Flow, now: float) -> None:
+        self._j_flow(flow)
         flow.start_s = now
         if flow.resource is not None:
             self._enqueue(flow.resource, _Pkt(flow.fid, 0, 0, 0.0, None), now)
@@ -487,6 +623,12 @@ class FabricSim:
 
     def run(self) -> float:
         """Process every pending event; returns the frontier time."""
+        while True:
+            self._drain()
+            if not self._unstick():
+                return self._frontier
+
+    def _drain(self) -> None:
         while self._heap:
             t, _, kind, arg = heapq.heappop(self._heap)
             self._frontier = max(self._frontier, t)
@@ -496,6 +638,9 @@ class FabricSim:
                 link = self._link(arg)
                 if link.retry_at is not None and link.retry_at <= t:
                     link.retry_at = None
+                else:
+                    # a superseded ghost drained out of the heap on its own
+                    self._stale = max(0, self._stale - 1)
                 self._try_start(arg, t)
             elif kind == "enqueue":
                 key, pkt = arg
@@ -506,23 +651,64 @@ class FabricSim:
                 pkt: _Pkt = arg
                 flow = self._flows[pkt.fid]
                 here = pkt.hop + 1
-                link_key = self._link_key(flow.route[pkt.hop],
-                                          flow.route[here], flow.channel)
+                up_key = self._link_key(flow.route[pkt.hop],
+                                        flow.route[here], flow.channel)
                 if here == len(flow.route) - 1:
                     # consumed at the endpoint: buffer drains immediately
-                    up = self._link(link_key)
+                    up = self._link(up_key)
                     up.credits[flow.cidx] += pkt.nbytes
-                    self._try_start(link_key, t)
+                    self._try_start(up_key, t)
+                    self._j_flow(flow)
                     flow.arrived += 1
                     if flow.arrived == flow.npkts:
                         self._finish_flow(flow, t + flow.dst_over)
                 else:
                     nxt = self._link_key(flow.route[here],
                                          flow.route[here + 1], flow.channel)
+                    self._j_pkt(pkt)
                     pkt.hop = here
-                    pkt.prev = link_key
+                    pkt.prev = up_key
                     self._enqueue(nxt, pkt, t)
-        return self._frontier
+
+    def _unstick(self) -> bool:
+        """Credit-deadlock recovery (escape credit); True if it made
+        progress.
+
+        Dimension-ordered routes on the wrap-around rings of a torus can
+        form a cyclic buffer wait under partitioned per-class credits:
+        every backlogged channel's head packet needs more credit than its
+        link holds, and that credit can only return once a downstream
+        link in the same cycle transmits.  The event heap then drains
+        with packets still queued — a state a completing run can never
+        reach (a startable head always has a pending wake event), so
+        engaging here never perturbs a workload that finishes on its
+        own.  Recovery mirrors hardware escape/bubble flow control: the
+        oldest blocked head packet borrows exactly the missing credit —
+        the class balance goes negative and is repaid by the packet's
+        normal downstream credit return — guaranteeing at least one
+        transmission of forward progress per call."""
+        best = None
+        for key, link in self._links.items():
+            for c, q in enumerate(link.queues):
+                if not q:
+                    continue
+                pkt = q[0]
+                if pkt.nbytes <= link.credits[c] \
+                        or self._flows[pkt.fid].resource is not None:
+                    continue
+                order = (pkt.fid, pkt.idx, pkt.hop)
+                if best is None or order < best[0]:
+                    best = (order, key, c)
+        if best is None:
+            return False
+        _, key, c = best
+        link = self._link(key)
+        need = link.queues[c][0].nbytes - link.credits[c]
+        link.credits[c] += need          # loan the escape credit
+        self.deadlock_breaks += 1
+        self._try_start(key, self._frontier)
+        link.credits[c] -= need          # balance now negative: the loan
+        return True                      # is repaid on the credit return
 
     # -- results --------------------------------------------------------------
     def finish_s(self, fid: int) -> float:
@@ -616,14 +802,14 @@ class FabricSim:
                        f.finish_s, f.pending, list(f.dependents))
                  for fid, f in self._flows.items()}
         return (links, pkts, heap, flows, self._frontier,
-                self._seq_n, self._fid_n)
+                self._seq_n, self._fid_n, self._stale)
 
     def _restore(self, snap: tuple) -> None:
         """Put every mutable field back exactly as ``_snapshot`` saw it;
         objects created since (ghost flows, their packets and events, new
         links) are dropped.  The snapshot is consumed — its saved lists
         become the live state."""
-        links, pkts, heap, flows, frontier, seq_n, fid_n = snap
+        links, pkts, heap, flows, frontier, seq_n, fid_n, stale = snap
         for k in [k for k in self._links if k not in links]:
             del self._links[k]
         for k, (free_at, queues, credits, vtime, vfloor, busy_s,
@@ -657,6 +843,39 @@ class FabricSim:
         self._frontier = frontier
         self._seq_n = seq_n
         self._fid_n = fid_n
+        self._stale = stale
+
+    def _rollback(self, j: _Journal) -> None:
+        """Undo everything the probe touched, exactly as the journal's
+        pre-images recorded it; ghost flows/links/events vanish."""
+        for key, saved in j.links.items():
+            if saved is None:
+                self._links.pop(key, None)     # link created by the probe
+                continue
+            link = self._links[key]
+            (link.free_at, link.queues, link.credits, link.vtime,
+             link.vfloor, link.busy_s, link.bytes_carried,
+             link.class_bytes, link.retry_at) = saved
+        for fid in range(j.fid_n, self._fid_n):   # ghost flows
+            self._flows.pop(fid, None)
+        for fid, (sent, arrived, req_start, start_s, finish_s, pending,
+                  dependents) in j.flows.items():
+            f = self._flows[fid]
+            f.sent = sent
+            f.arrived = arrived
+            f.req_start = req_start
+            f.start_s = start_s
+            f.finish_s = finish_s
+            f.pending = pending
+            f.dependents = dependents
+        for p, hop, prev in j.pkts.values():
+            p.hop = hop
+            p.prev = prev
+        self._heap = j.heap
+        self._frontier = j.frontier
+        self._seq_n = j.seq_n
+        self._fid_n = j.fid_n
+        self._stale = j.stale
 
     def probe_route(self, route: Sequence[int], nbytes: float, *,
                     start_s: float | None = None, **kw) -> float:
@@ -664,17 +883,45 @@ class FabricSim:
         ``route`` against the CURRENT traffic, without committing anything
         to the timeline.
 
-        Runs on the live simulator under a bounded snapshot/restore of the
-        link + flow scheduling state (no more whole-sim deep copy), so
-        probing k candidate routes costs O(k * in-flight state)."""
-        snap = self._snapshot()
-        try:
-            start = self._frontier if start_s is None else start_s
+        Runs on the live simulator under a copy-on-write journal: state is
+        recorded lazily the first time the ghost traffic touches it, so
+        the rollback cost is bounded by the links on the probed route plus
+        the flows crossing them — not the whole resident sim.  The last
+        probe's touch counts are published in ``last_probe_report``."""
+        start = self._frontier if start_s is None else start_s
+
+        def ghost() -> float:
             fid = self.inject(route[0], route[-1], nbytes, start_s=start,
                               route=route, **kw)
             return self.finish_s(fid) - start
+
+        db = self.deadlock_breaks
+        if self._journal is not None:
+            # nested probe: fall back to the eager full snapshot
+            snap = self._snapshot()
+            try:
+                return ghost()
+            finally:
+                self._restore(snap)
+                self.deadlock_breaks = db
+        j = _Journal(heap=list(self._heap), frontier=self._frontier,
+                     seq_n=self._seq_n, fid_n=self._fid_n,
+                     stale=self._stale)
+        self._journal = j
+        try:
+            out = ghost()
         finally:
-            self._restore(snap)
+            self._journal = None
+            self._rollback(j)
+            self.deadlock_breaks = db
+        self.last_probe_report = {
+            "links_touched": len(j.links),
+            "flows_touched": len(j.flows),
+            "pkts_touched": len(j.pkts),
+            "links_total": len(self._links),
+            "flows_total": len(self._flows),
+        }
+        return out
 
 
 # ----------------------------------------------------------------------------
@@ -754,6 +1001,7 @@ def simulate_schedule(schedule: CollectiveSchedule, nbytes: int,
                       net: NetModel | None = None, *,
                       cls: TrafficClass = TrafficClass.COLLECTIVE,
                       qos: QosPolicy | None = None,
+                      fidelity: str = "packet",
                       **endpoint_kw) -> CostEstimate:
     """Event-driven price of one collective on a quiet fabric — the
     ``backend="sim"`` path of ``fabric.estimate``.
@@ -763,9 +1011,17 @@ def simulate_schedule(schedule: CollectiveSchedule, nbytes: int,
     round sharing a link direction) the two backends must agree — the
     differential in ``tests/fabric_checks.py`` holds both to it.  The
     default (no ``qos``) prices on the single-class FIFO link.
+    ``fidelity`` selects the simulator tier (``fluid.make_sim``): the
+    default ``"packet"`` oracle, or the ``"fluid"``/``"hybrid"`` fast
+    path for large tori.
     """
-    sim = FabricSim(Torus(schedule.torus_dims), net,
-                    faults=schedule.faults, qos=qos)
+    if fidelity == "packet":
+        sim: FabricSim = FabricSim(Torus(schedule.torus_dims), net,
+                                   faults=schedule.faults, qos=qos)
+    else:
+        from repro.core.fabric.fluid import make_sim
+        sim = make_sim(Torus(schedule.torus_dims), net, fidelity=fidelity,
+                       faults=schedule.faults, qos=qos)
     phase_s = []
     t = 0.0
     tail: list[int] = []
@@ -799,8 +1055,24 @@ def candidate_routes(torus: Torus, src: int, dst: int,
     the dimension-ordered minimal path plus, per live first hop, the BFS
     shortest path that commits to that first link (the detour family the
     router could select).  Sorted by hop count; raises ``UnroutableError``
-    when no route survives."""
+    when no route survives.
+
+    Cached per (torus dims, src, dst, fault map): within one fault epoch,
+    repeated probes and re-striping pay the BFS detour family exactly
+    once (``clear_route_cache`` drops dead epochs)."""
     faults = faults or FaultMap()
+    key = (torus.dims, src, dst, faults)
+    hit = _candidates_cache.get(key, _MISS)
+    if hit is _MISS:
+        if len(_candidates_cache) >= _ROUTE_CACHE_CAP:
+            _candidates_cache.clear()
+        hit = _candidates_cache[key] = _candidate_routes_uncached(
+            torus, src, dst, faults)
+    return list(hit)
+
+
+def _candidate_routes_uncached(torus: Torus, src: int, dst: int,
+                               faults: FaultMap) -> list[tuple[int, ...]]:
     for r in (src, dst):
         if r in faults.dead_nodes:
             raise UnroutableError(f"route endpoint rank {r} is dead")
@@ -816,7 +1088,7 @@ def candidate_routes(torus: Torus, src: int, dst: int,
         if n == dst:
             path: list[int] | None = [n]
         else:
-            path = _bfs_path(torus, n, dst, src_blocked)
+            path = _cached_bfs(torus, n, dst, src_blocked)
         if path is None:
             continue
         routes.append((src, *path))

@@ -97,11 +97,14 @@ class RdmaEndpoint:
         self.torus = torus
         self.rank = rank
         self.engines = engines
-        # shared fabric timeline (core.fabric.sim.FabricSim): when attached,
-        # put_pages/get_time inject their host-IF DMA drain and wire legs as
-        # flows on it instead of summing closed-form terms, so concurrent
-        # operations — this card's or any other card sharing the sim —
-        # contend for links and host-interface slots.  None = closed-form.
+        # shared fabric timeline: when attached, put_pages/get_time inject
+        # their host-IF DMA drain and wire legs as flows on it instead of
+        # summing closed-form terms, so concurrent operations — this
+        # card's or any other card sharing the sim — contend for links and
+        # host-interface slots.  Any ``fabric.make_sim`` fidelity tier
+        # works (the surface is duck-typed): the packet ``FabricSim``
+        # oracle, or ``FluidSim``/``HybridSim`` for big clusters.
+        # None = closed-form.
         self.sim = sim
         self.last_put_report: dict | None = None
         # prefetchable command queue (§2.1): in-flight descriptor slots.

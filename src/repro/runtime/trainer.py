@@ -83,6 +83,11 @@ class TrainerConfig:
     # event-driven link-level FabricSim replay — same number on healthy
     # single-flow schedules, honest contention pricing under detours)
     cost_backend: str = "analytic"
+    # sim-backend fidelity tier: "packet" (the bitwise oracle), "fluid"
+    # (flow-level rate allocation — the fast path for big tori) or
+    # "hybrid" (fluid with packet escalation of contended links).  The
+    # analytic backend ignores it.
+    cost_fidelity: str = "packet"
     wd_period: float = 0.5          # LO|FA|MO watchdog period (seconds)
     straggler_factor: float = 3.0   # step slower than this x median -> flag
     seed: int = 0
@@ -253,14 +258,17 @@ class Trainer:
         # shared ServingCluster timeline — where the flows then ride the
         # COLLECTIVE virtual channel
         cls = fabric.TrafficClass.COLLECTIVE
+        fid = self.tcfg.cost_fidelity
         total = fabric.estimate(scheds["loss"], 4, backend=backend,
-                                cls=cls).total_s
+                                fidelity=fid, cls=cls).total_s
         for p in jax.tree.leaves(self.params):
             chunk_bytes = -(-p.size // dp) * p.dtype.itemsize
             total += fabric.estimate(scheds["rs"], 4 * p.size,
-                                     backend=backend, cls=cls).total_s
+                                     backend=backend, fidelity=fid,
+                                     cls=cls).total_s
             total += fabric.estimate(scheds["ag"], chunk_bytes,
-                                     backend=backend, cls=cls).total_s
+                                     backend=backend, fidelity=fid,
+                                     cls=cls).total_s
         return total
 
     def _bwd_compute_model_s(self) -> float:
@@ -294,6 +302,7 @@ class Trainer:
                 scheds["rs"], self.bucket_plan, self._bwd_compute_model_s(),
                 queue_depth=self.rdma.queue_depth,
                 backend=self.tcfg.cost_backend,
+                fidelity=self.tcfg.cost_fidelity,
                 cls=fabric.TrafficClass.COLLECTIVE)
         else:
             self.bucket_plan = None

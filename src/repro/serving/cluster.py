@@ -136,7 +136,8 @@ class ServingCluster:
                  chunked_prefill: bool = False,
                  tp_axes: tuple[str, ...] | None = (),
                  net=None, sim_kw: dict | None = None,
-                 qos: fabric.QosPolicy | None = None) -> None:
+                 qos: fabric.QosPolicy | None = None,
+                 fidelity: str = "packet") -> None:
         self.cfg = cfg
         self.torus = torus
         ranks = tuple(node_ranks) if node_ranks is not None \
@@ -150,12 +151,17 @@ class ServingCluster:
         # every node's wire identically.  ``qos`` selects the link
         # arbiter: a multi-class QosPolicy gives decode-step TP flows
         # (DECODE) weighted protection from migration PUTs (BULK); the
-        # default keeps the classic single-FIFO link.
+        # default keeps the classic single-FIFO link.  ``fidelity``
+        # selects the simulator tier (``fabric.make_sim``): "packet" is
+        # the bitwise oracle, "fluid"/"hybrid" keep a big cluster's
+        # shared timeline affordable (flow-level rate allocation; probes
+        # stay cheap, so congestion-aware routing scales).
         self.net = net or NetModel()
         sim_kw = dict(sim_kw or {})
         if qos is not None:
             sim_kw.setdefault("qos", qos)
-        self.sim = fabric.FabricSim(torus, self.net, **sim_kw)
+        self.sim = fabric.make_sim(torus, self.net, fidelity=fidelity,
+                                   **sim_kw)
         self.nodes: dict[int, ClusterNode] = {}
         for r in ranks:
             lm = PagedLM(cfg, params, max_batch=max_batch, max_seq=max_seq,
@@ -184,12 +190,17 @@ class ServingCluster:
             self.faults.dead_nodes,
             set(self.faults.dead_links) | {(a, b)})
         self.sim.faults = self.faults   # sim flows detour the same map
+        # route/BFS memo entries are keyed by fault epoch, so stale hits
+        # are impossible — dropping the dead epoch's entries just keeps
+        # the cache from accumulating one generation per fault event
+        fabric.clear_route_cache()
         for node in self.nodes.values():
             node.lm.relower_tp(self.faults)
 
     def clear_faults(self) -> None:
         self.faults = fabric.FaultMap()
         self.sim.faults = self.faults
+        fabric.clear_route_cache()
         for node in self.nodes.values():
             node.lm.relower_tp(self.faults)
 

@@ -125,7 +125,8 @@ class PagedLM:
                  tp_axes: tuple[str, ...] | None = None,
                  rank: int = 0, net: NetModel | None = None,
                  sim: fabric.FabricSim | None = None,
-                 cost_backend: str = "analytic") -> None:
+                 cost_backend: str = "analytic",
+                 cost_fidelity: str = "packet") -> None:
         assert cfg.family in ("dense", "moe", "vlm")
         self.cfg = cfg
         self.params = params
@@ -148,7 +149,9 @@ class PagedLM:
                              f"{self.torus.dims}")
         self.net = net or NetModel()
         self.bytes_per_token = 2 * L * cfg.n_kv_heads * hd * 2
-        # shared fabric timeline: a serving cluster passes ONE FabricSim so
+        # shared fabric timeline: a serving cluster passes ONE simulator
+        # (any fidelity tier of ``fabric.make_sim`` — packet ``FabricSim``,
+        # ``FluidSim`` or ``HybridSim``; the surface is duck-typed) so
         # this node's migration PUTs and decode-step TP collectives contend
         # with every other node's traffic on the same torus links
         self.sim = sim
@@ -167,6 +170,7 @@ class PagedLM:
                             for i in range(self.torus.ndims))
         self.tp_axes = tuple(tp_axes)
         self._cost_backend = cost_backend
+        self._cost_fidelity = cost_fidelity
         if self.tp_axes:
             self.tp_schedule = fabric.lower_all_reduce(self.torus,
                                                        self.tp_axes)
@@ -178,7 +182,7 @@ class PagedLM:
             self._tp_ar_bytes = ar_bytes
             self.predicted_tp_comm_s = L * fabric.estimate(
                 self.tp_schedule, ar_bytes, self.net,
-                backend=cost_backend).total_s
+                backend=cost_backend, fidelity=cost_fidelity).total_s
         else:
             self.tp_schedule = None
             self._tp_base = None
@@ -214,7 +218,8 @@ class PagedLM:
         self.tp_schedule = sched
         self.predicted_tp_comm_s = self.cfg.n_layers * fabric.estimate(
             sched, self._tp_ar_bytes, self.net,
-            backend=self._cost_backend).total_s
+            backend=self._cost_backend,
+            fidelity=self._cost_fidelity).total_s
         return True
 
     # -- slot management --------------------------------------------------------

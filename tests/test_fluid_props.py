@@ -1,0 +1,161 @@
+"""Property-style differential sweeps for the fluid fidelity tiers.
+
+Random tori x random QoS policies x random fault maps x random flow
+soups, asserting the tier contract from ``tests/test_fluid_sim.py`` at
+property scale:
+
+  * **per-flow completion time**: the fluid tier with packet-mode
+    escalation (``fidelity="hybrid"``) stays within 10% of the packet
+    oracle per flow (plus the packet-granularity quantization slack for
+    few-packet flows);
+  * **per-class byte conservation**: the pure fluid tier attributes
+    every wire hop of every flow to its class EXACTLY as the packet
+    oracle does — no tolerance;
+  * **fault parity**: under a random dead link both tiers take the same
+    detour (identical hop counts) and the per-flow bar still holds.
+
+Gating follows the PR-5 pattern: hypothesis drives the sweep when the
+dev extra is installed (shrinking, example database); otherwise a
+hand-rolled seeded sweep covers the same space, so the coverage does
+not vanish on boxes without dev extras.
+"""
+import random
+
+import pytest
+
+from repro.core import fabric
+from repro.core.fabric.fluid import make_sim
+from repro.core.fabric.qos import QosPolicy, TrafficClass
+from repro.core.topology import Torus
+
+try:
+    import hypothesis
+    from hypothesis import strategies as hyp_st
+    HAVE_HYPOTHESIS = True
+except ImportError:        # hand-rolled fallback sweep below
+    HAVE_HYPOTHESIS = False
+
+MESHES = [(6,), (8,), (2, 4), (3, 3), (2, 2, 2), (2, 2, 4)]
+REL_TOL = 0.10
+_FALLBACK_SEEDS = list(range(10))
+
+
+def sweep(trial):
+    """Drive ``trial(seed)`` by hypothesis when installed, else by a
+    fixed seeded sweep (same trial body, deterministic coverage)."""
+    if HAVE_HYPOTHESIS:
+        return hypothesis.settings(deadline=None, max_examples=25)(
+            hypothesis.given(seed=hyp_st.integers(0, 2 ** 31 - 1))(trial))
+    return pytest.mark.parametrize("seed", _FALLBACK_SEEDS)(trial)
+
+
+def _tol(sim, tp: float) -> float:
+    # 10% of the oracle time, floored by packet-granularity quantization
+    # (few-packet flows meet transient queues the rate model cannot see)
+    quant = 8 * sim.packet_bytes / sim.link_bw + 8 * sim.net.t_hop
+    return max(REL_TOL * tp, quant)
+
+
+def _rand_qos(rnd):
+    r = rnd.random()
+    if r < 0.30:
+        return None
+    if r < 0.45:
+        return QosPolicy(single_class=True)
+    if r < 0.70:
+        return QosPolicy()
+    return QosPolicy(
+        weights={c: float(rnd.randint(1, 16)) for c in TrafficClass},
+        credit_frac={c: float(rnd.randint(1, 8)) for c in TrafficClass})
+
+
+def _rand_flows(rnd, n, n_flows, nb_hi=1 << 20):
+    flows = []
+    for _ in range(n_flows):
+        s = rnd.randrange(n)
+        d = rnd.randrange(n)
+        while d == s:
+            d = rnd.randrange(n)
+        flows.append((s, d, rnd.randint(1024, nb_hi),
+                      rnd.choice(list(TrafficClass)),
+                      rnd.randint(0, 3) * 100e-6))
+    return flows
+
+
+def _setup(seed, *, with_fault=False):
+    rnd = random.Random(seed)
+    dims = rnd.choice(MESHES)
+    torus = Torus(dims)
+    kw = {}
+    qos = _rand_qos(rnd)
+    if qos is not None:
+        kw["qos"] = qos
+    if with_fault:
+        # one random dead link: every mesh in MESHES stays connected
+        # (multi-dim tori trivially; 1D rings >= 3 degrade to a line)
+        u = rnd.randrange(torus.size)
+        v = rnd.choice(torus.neighbors(u))
+        kw["faults"] = fabric.FaultMap.normalized(set(), {(u, v)})
+    flows = _rand_flows(rnd, torus.size, rnd.randint(3, 12))
+    return torus, flows, kw
+
+
+def _run(torus, flows, fidelity, kw):
+    sim = make_sim(torus, fidelity=fidelity, **kw)
+    fids = [sim.inject(s, d, nb, cls=c, start_s=st)
+            for s, d, nb, c, st in flows]
+    sim.run()
+    return sim, fids
+
+
+# ---------------------------------------------------------------------------
+# per-flow differential: hybrid holds the 10% bar on random soups
+# ---------------------------------------------------------------------------
+
+@sweep
+def test_per_flow_differential(seed):
+    torus, flows, kw = _setup(seed)
+    p, pfids = _run(torus, flows, "packet", kw)
+    h, hfids = _run(torus, flows, "hybrid", kw)
+    for pf, hf, (s, d, nb, c, st) in zip(pfids, hfids, flows):
+        tp = p.finish_s(pf) - st
+        th = h.finish_s(hf) - st
+        assert abs(th - tp) <= _tol(p, tp), (seed, s, d, nb, c)
+
+
+# ---------------------------------------------------------------------------
+# per-class byte conservation: fluid == packet, exactly
+# ---------------------------------------------------------------------------
+
+@sweep
+def test_class_bytes_conserved(seed):
+    torus, flows, kw = _setup(seed)
+    p, pfids = _run(torus, flows, "packet", kw)
+    f, ffids = _run(torus, flows, "fluid", kw)
+    want = {c: 0.0 for c in TrafficClass}
+    for fid, (_, _, nb, c, _) in zip(ffids, flows):
+        want[c] += nb * f.flow(fid).hops
+    got_f, got_p = f.class_stats(), p.class_stats()
+    for c in TrafficClass:
+        assert got_f[c] == pytest.approx(want[c]), (seed, c)
+        assert got_f[c] == pytest.approx(got_p[c]), (seed, c)
+    # fluid tracks the aggregate finish too (soup regime: 15% + quant)
+    mk_p = max(p.finish_s(x) for x in pfids)
+    mk_f = max(f.finish_s(x) for x in ffids)
+    assert abs(mk_f - mk_p) <= max(0.15 * mk_p, _tol(p, mk_p)), seed
+
+
+# ---------------------------------------------------------------------------
+# fault maps: both tiers take the identical detour
+# ---------------------------------------------------------------------------
+
+@sweep
+def test_fault_detour_parity(seed):
+    torus, flows, kw = _setup(seed, with_fault=True)
+    p, pfids = _run(torus, flows, "packet", kw)
+    h, hfids = _run(torus, flows, "hybrid", kw)
+    for pf, hf, (s, d, nb, c, st) in zip(pfids, hfids, flows):
+        assert h.flow(hf).hops == p.flow(pf).hops, (seed, s, d)
+        tp = p.finish_s(pf) - st
+        th = h.finish_s(hf) - st
+        assert abs(th - tp) <= _tol(p, tp), (seed, s, d, nb, c)
