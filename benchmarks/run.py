@@ -6,6 +6,9 @@
                                                      # fast local iteration
   PYTHONPATH=src python -m benchmarks.run --profile contention  # + cProfile
                                                      # top-20 per module
+  PYTHONPATH=src python -m benchmarks.run --seed 7   # reseed every module
+                                                     # (default 0; exported
+                                                     # as $BENCH_SEED)
 
 Each module exposes ``run() -> [rows]`` and ``check(rows) -> [errors]``;
 check() validates the paper's quantitative claims against our model and the
@@ -25,13 +28,16 @@ import importlib
 import io
 import json
 import os
+import random
 import re
 import sys
 import time
 
+import numpy as np
+
 MODULES = ["apelink_eff", "dma_overlap", "tlb", "latency", "bandwidth",
            "fabric_cost", "overlap", "migration", "contention", "qos",
-           "lofamo", "nextgen", "roofline", "simscale"]
+           "lofamo", "nextgen", "roofline", "simscale", "autotune"]
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -57,7 +63,7 @@ def list_snapshots(dirname: str) -> list[tuple[int, str]]:
 KEEP_SNAPSHOTS = 5   # the gate reads the newest 2; a few more for humans
 
 
-def write_snapshot(names, rows, timings, errors) -> str | None:
+def write_snapshot(names, rows, timings, errors, seed=0) -> str | None:
     if os.environ.get("BENCH_JSON", "1") == "0":
         return None
     d = bench_dir()
@@ -68,6 +74,7 @@ def write_snapshot(names, rows, timings, errors) -> str | None:
     payload = {
         "seq": seq,
         "created_unix": time.time(),
+        "seed": seed,
         "modules": list(names),
         "timings_s": timings,
         "rows": rows,
@@ -89,6 +96,25 @@ def main(argv=None) -> int:
     profile = "--profile" in argv
     if profile:
         argv.remove("--profile")
+    # --seed N: one seed threaded into EVERY module — exported as
+    # $BENCH_SEED (modules with their own generators read it: simscale's
+    # workload rng, autotune's search agents) and applied to the global
+    # random/numpy streams before each module, so a snapshot is exactly
+    # reproducible across CI runs from its recorded seed
+    seed = 0
+    if "--seed" in argv:
+        i = argv.index("--seed")
+        if i + 1 >= len(argv):
+            print("--seed requires an integer", file=sys.stderr)
+            return 2
+        try:
+            seed = int(argv[i + 1])
+        except ValueError:
+            print(f"--seed requires an integer, got {argv[i + 1]!r}",
+                  file=sys.stderr)
+            return 2
+        del argv[i:i + 2]
+    os.environ["BENCH_SEED"] = str(seed)
     if "--only" in argv:
         # --only <module>: run exactly one module (fast local iteration);
         # equivalent to the positional form but self-documenting in CI logs
@@ -113,6 +139,8 @@ def main(argv=None) -> int:
     timings: dict[str, float] = {}
     for name in names:
         mod = importlib.import_module(f"benchmarks.{name}")
+        random.seed(seed)
+        np.random.seed(seed % (1 << 32))
         t0 = time.perf_counter()
         if profile:
             # per-module hot-spot profile: where does the bench's wall
@@ -142,7 +170,7 @@ def main(argv=None) -> int:
         w.writerow([r["bench"], r["metric"], r["value"], r.get("note", "")])
     print()
     print(buf.getvalue())
-    snap = write_snapshot(names, all_rows, timings, all_errs)
+    snap = write_snapshot(names, all_rows, timings, all_errs, seed=seed)
     if snap:
         print(f"bench snapshot: {snap}")
     if all_errs:

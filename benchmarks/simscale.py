@@ -110,7 +110,10 @@ def _schedule_differential() -> tuple[float, float]:
 
 def run() -> list[dict]:
     fast = os.environ.get("SIMSCALE_FAST", "0") == "1"
-    flows = _workload(random.Random(SEED))
+    # --seed threads through $BENCH_SEED (benchmarks/run.py); default
+    # keeps the historical fixed workload so snapshots diff bitwise
+    flows = _workload(random.Random(
+        int(os.environ.get("BENCH_SEED", str(SEED)))))
 
     fluid_dt, fsim = _run_tier("fluid", flows)
     rows = [

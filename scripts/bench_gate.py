@@ -1,17 +1,30 @@
 #!/usr/bin/env python3
 """Bench-regression gate: diff the two newest ``BENCH_<n>.json`` snapshots
-(written by ``benchmarks/run.py``) and fail on >10% regression of gated
-metrics.
+(written by ``benchmarks/run.py``) and fail on regression of gated metrics.
 
-The contract: a benchmark row may declare ``"gate": "higher"`` (bigger is
-better — speedups, reductions, efficiencies) or ``"gate": "lower"``
-(smaller is better — times, costs).  Ungated rows are informational and
-never fail the gate; gated metrics present in only one snapshot (a bench
-was added/removed or a different lane ran) are reported but don't fail.
+The contract, per benchmark row:
+
+* **direction** — ``"gate": "higher"`` (bigger is better — speedups,
+  reductions, efficiencies) or ``"gate": "lower"`` (smaller is better —
+  times, costs).  The boolean spelling ``"higher_is_better": true|false``
+  is accepted as an equivalent (ArchGym-style metric descriptors use it).
+* **tolerance** — ``"tol": 0.15`` overrides the global ``--threshold``
+  (default 10%) for that one metric: tight gates (``tol: 0.0`` for the
+  autotuner's bitwise determinism metric) and loose ones (searched-gain
+  metrics that legitimately wander with the search budget) coexist in one
+  snapshot.
+
+Ungated rows are informational and never fail the gate; gated metrics
+present in only one snapshot (a bench was added/removed or a different
+lane ran) are reported but don't fail.
+
+Besides the plain-text report, the gate renders a markdown summary table
+— printed to stdout, and appended to ``$GITHUB_STEP_SUMMARY`` when that
+file is set (the GitHub Actions job-summary panel).
 
     python scripts/bench_gate.py [--dir DIR] [--threshold 0.10]
 
-Exit 0 when no gated metric regressed past the threshold (or when fewer
+Exit 0 when no gated metric regressed past its tolerance (or when fewer
 than two snapshots exist — the first run records the baseline), exit 1
 otherwise.
 """
@@ -28,43 +41,79 @@ sys.path.insert(0, REPO)
 from benchmarks.run import list_snapshots  # noqa: E402  (shared discovery)
 
 
+def row_direction(row: dict) -> str | None:
+    """"higher" | "lower" | None, from either metadata spelling."""
+    gate = row.get("gate")
+    if gate in ("higher", "lower"):
+        return gate
+    hib = row.get("higher_is_better")
+    if isinstance(hib, bool):
+        return "higher" if hib else "lower"
+    return None
+
+
 def gated_rows(snapshot: dict) -> dict[tuple[str, str], dict]:
     out = {}
     for row in snapshot.get("rows", []):
-        if row.get("gate") in ("higher", "lower"):
+        if row_direction(row) is not None:
             out[(row["bench"], row["metric"])] = row
     return out
 
 
-def compare(prev: dict, cur: dict, threshold: float) -> tuple[list, list]:
-    """Returns (report lines, regressions)."""
+def compare(prev: dict, cur: dict, threshold: float)\
+        -> tuple[list, list, list]:
+    """Returns (report lines, markdown table rows, regressions)."""
     prows, crows = gated_rows(prev), gated_rows(cur)
-    lines, regressions = [], []
+    lines, md, regressions = [], [], []
     for key in sorted(crows):
         bench, metric = key
+        row = crows[key]
+        direction = row_direction(row)
+        tol = float(row.get("tol", threshold))
         if key not in prows:
             lines.append(f"  new    {bench}.{metric} = "
-                         f"{crows[key]['value']:.6g} (baseline recorded)")
+                         f"{row['value']:.6g} (baseline recorded)")
+            md.append((f"{bench}.{metric}", "—", f"{row['value']:.6g}",
+                       "—", direction, f"{tol:.0%}", "new"))
             continue
-        base, new = float(prows[key]["value"]), float(crows[key]["value"])
-        direction = crows[key]["gate"]
+        base, new = float(prows[key]["value"]), float(row["value"])
         if base == 0.0:
             delta = 0.0 if new == 0.0 else float("inf")
         else:
             delta = (new - base) / abs(base)
         worse = (-delta if direction == "higher" else delta)
         tag = "ok    "
-        if worse > threshold:
-            tag = "REGRESS"
+        status = "ok"
+        if worse > tol:
+            tag, status = "REGRESS", "**REGRESS**"
             regressions.append(
                 f"{bench}.{metric}: {base:.6g} -> {new:.6g} "
                 f"({delta * 100:+.1f}%, {direction}-is-better, "
-                f"threshold {threshold * 100:.0f}%)")
+                f"tolerance {tol * 100:.0f}%)")
         lines.append(f"  {tag} {bench}.{metric}: {base:.6g} -> {new:.6g} "
-                     f"({delta * 100:+.1f}%, {direction})")
+                     f"({delta * 100:+.1f}%, {direction}, "
+                     f"tol {tol * 100:.0f}%)")
+        md.append((f"{bench}.{metric}", f"{base:.6g}", f"{new:.6g}",
+                   f"{delta * 100:+.1f}%", direction, f"{tol:.0%}", status))
     for key in sorted(set(prows) - set(crows)):
         lines.append(f"  gone   {key[0]}.{key[1]} (not in current run)")
-    return lines, regressions
+        md.append((f"{key[0]}.{key[1]}", f"{prows[key]['value']:.6g}", "—",
+                   "—", row_direction(prows[key]), "—", "gone"))
+    return lines, md, regressions
+
+
+def markdown_summary(md_rows: list, pseq: int, cseq: int,
+                     regressions: list) -> str:
+    verdict = (f"❌ {len(regressions)} regression(s)" if regressions
+               else "✅ no gated-metric regressions")
+    head = (f"### Bench gate: `BENCH_{pseq}.json` → `BENCH_{cseq}.json`\n\n"
+            f"{verdict}\n\n")
+    table = ["| metric | prev | cur | Δ | direction | tol | status |",
+             "|---|---:|---:|---:|---|---:|---|"]
+    for name, base, new, delta, direction, tol, status in md_rows:
+        table.append(f"| `{name}` | {base} | {new} | {delta} "
+                     f"| {direction} | {tol} | {status} |")
+    return head + "\n".join(table) + "\n"
 
 
 def main(argv=None) -> int:
@@ -72,7 +121,8 @@ def main(argv=None) -> int:
     ap.add_argument("--dir", default=os.environ.get("BENCH_DIR") or REPO,
                     help="directory holding BENCH_<n>.json snapshots")
     ap.add_argument("--threshold", type=float, default=0.10,
-                    help="relative regression tolerance (default 0.10)")
+                    help="default relative regression tolerance for rows "
+                         "without a per-metric 'tol' (default 0.10)")
     args = ap.parse_args(argv)
     snaps = list_snapshots(args.dir)
     if len(snaps) < 2:
@@ -86,10 +136,17 @@ def main(argv=None) -> int:
     with open(cpath) as f:
         cur = json.load(f)
     print(f"[bench-gate] BENCH_{pseq}.json -> BENCH_{cseq}.json "
-          f"(threshold {args.threshold * 100:.0f}%)")
-    lines, regressions = compare(prev, cur, args.threshold)
+          f"(default threshold {args.threshold * 100:.0f}%)")
+    lines, md_rows, regressions = compare(prev, cur, args.threshold)
     for ln in lines:
         print(ln)
+    summary = markdown_summary(md_rows, pseq, cseq, regressions)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(summary)
+    else:
+        print("\n" + summary)
     if regressions:
         print("\nBENCH REGRESSIONS:", file=sys.stderr)
         for r in regressions:

@@ -1,18 +1,58 @@
 #!/usr/bin/env bash
 # CI driver — the single source of truth for local runs AND the GitHub
-# workflow (.github/workflows/ci.yml invokes this same script).
+# workflows (.github/workflows/ci.yml and nightly.yml invoke this same
+# script).
 #
-#   scripts/ci.sh fast   # PR lane:   lint -> fast tests (-m "not slow")
-#                        #            -> quick benches -> regression gate
-#   scripts/ci.sh full   # main lane: lint -> full tier-1 tests
-#                        #            -> all benches -> regression gate
+#   scripts/ci.sh fast     # PR lane:    lint -> fast tests (-m "not slow")
+#                          #             -> quick benches (incl. the
+#                          #             20-step autotune smoke) -> gate
+#   scripts/ci.sh full     # main lane:  lint -> full tier-1 tests
+#                          #             -> all benches -> gate
+#   scripts/ci.sh nightly  # nightly:    full lane budgets + the full
+#                          #             design-space search with packet
+#                          #             re-scoring; best_configs.json +
+#                          #             BENCH_*.json become artifacts
+#
+# Every step is timed; on failure the script names the failing step and
+# prints the timing table collected so far, so a red run localises itself
+# from the last log lines alone.
 #
 # The bench gate diffs the BENCH_<n>.json snapshot this run writes against
-# the previous one (scripts/bench_gate.py; >10% regression of gated
-# metrics fails).  The first run just records the baseline.
+# the previous one (scripts/bench_gate.py; per-metric direction + tolerance,
+# default 10%).  The first run just records the baseline.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 LANE="${1:-fast}"
+case "$LANE" in fast|full|nightly) ;; *)
+    echo "usage: scripts/ci.sh [fast|full|nightly]" >&2; exit 2 ;;
+esac
+
+STEP_NAMES=()
+STEP_SECS=()
+
+timing_table() {
+    local i
+    echo "[ci] step timings:"
+    for i in "${!STEP_NAMES[@]}"; do
+        printf '[ci]   %-24s %5ss\n' "${STEP_NAMES[$i]}" "${STEP_SECS[$i]}"
+    done
+}
+
+step() {
+    local name="$1"; shift
+    echo "[ci] >> $name"
+    local t0=$SECONDS
+    if ! "$@"; then
+        local dt=$((SECONDS - t0))
+        STEP_NAMES+=("$name"); STEP_SECS+=("$dt")
+        timing_table
+        echo "[ci] FAILED at step '$name' after ${dt}s ($LANE lane)" >&2
+        exit 1
+    fi
+    local dt=$((SECONDS - t0))
+    STEP_NAMES+=("$name"); STEP_SECS+=("$dt")
+    echo "[ci] << $name (${dt}s)"
+}
 
 # Editable install makes `import repro` work without PYTHONPATH; keep the
 # PYTHONPATH fallback so the script also works where pip cannot write.
@@ -26,29 +66,38 @@ pip install -q pytest hypothesis ruff 2>/dev/null \
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "[ci] lint (ruff)"
 if command -v ruff >/dev/null 2>&1; then
     # hard failure when ruff is present (CI always has it; offline dev
     # boxes without it skip with a warning)
-    ruff check src tests benchmarks scripts
+    step "lint" ruff check src tests benchmarks scripts
 else
     echo "[ci] ruff not installed; skipping lint (best-effort offline)"
 fi
 
-if [ "$LANE" = "full" ]; then
-    echo "[ci] tier-1 tests (full lane)"
-    python -m pytest -x -q
-    echo "[ci] benchmarks (all modules)"
-    python -m benchmarks.run
+if [ "$LANE" = "fast" ]; then
+    # fast tests: -m "not slow", small hypothesis budget
+    step "tests-fast" env HYPOTHESIS_PROFILE=ci \
+        python -m pytest -x -q -m "not slow"
+    # quick benches: simscale smoke skips the packet baseline; the
+    # autotune smoke caps the design-space search at 20 fluid steps
+    # (seeded, genetic agent only) with the winner still packet-verified
+    step "benches-quick" env SIMSCALE_FAST=1 AUTOTUNE_FAST=1 \
+        python -m benchmarks.run overlap dma_overlap fabric_cost \
+        migration contention qos simscale autotune
 else
-    echo "[ci] tier-1 tests (fast lane: -m 'not slow', small hypothesis budget)"
-    HYPOTHESIS_PROFILE=ci python -m pytest -x -q -m "not slow"
-    echo "[ci] benchmarks (quick set; simscale smoke skips the packet baseline)"
-    SIMSCALE_FAST=1 python -m benchmarks.run overlap dma_overlap fabric_cost \
-        migration contention qos simscale
+    step "tests-full" python -m pytest -x -q
+    if [ "$LANE" = "nightly" ]; then
+        # the full ArchGym-style search: every agent, 120-step budgets,
+        # top-k packet re-score — refreshes best_configs.json, which the
+        # nightly workflow uploads (with the BENCH snapshot) as artifacts
+        step "benches-nightly" env AUTOTUNE_NIGHTLY=1 \
+            python -m benchmarks.run
+    else
+        step "benches-all" python -m benchmarks.run
+    fi
 fi
 
-echo "[ci] bench regression gate"
-python scripts/bench_gate.py
+step "bench-gate" python scripts/bench_gate.py
 
+timing_table
 echo "[ci] OK ($LANE lane)"

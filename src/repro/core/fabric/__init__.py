@@ -54,6 +54,17 @@ from repro.core.fabric.sim import (FabricSim, FlowResult, best_route,
                                    candidate_routes, clear_route_cache,
                                    inject_schedule, simulate_schedule,
                                    stripe_counts, striped_routes)
+# autotune references this package lazily (``from repro.core import
+# fabric``), so it must come after every name it may resolve at call time
+from repro.core.fabric.autotune import (AGENTS, ConfigSpace, FabricConfig,
+                                        FabricEnv, GeneticAgent, GpBoAgent,
+                                        RandomWalkAgent, ReplaySpec,
+                                        ScoreReport, SearchResult,
+                                        finalists, load_best_configs,
+                                        rescore, save_best_configs, search,
+                                        serving_replay, torus_shapes,
+                                        training_replay, tuned_config,
+                                        tuned_knob)
 
 __all__ = [
     "A2A", "AG", "AR", "HALO", "P2P", "RS",
@@ -74,4 +85,9 @@ __all__ = [
     "FIDELITIES", "FluidSim", "HybridSim", "make_sim",
     "DEFAULT_CREDIT_FRAC", "DEFAULT_WEIGHTS", "SINGLE_CLASS", "QosPolicy",
     "TrafficClass",
+    "AGENTS", "ConfigSpace", "FabricConfig", "FabricEnv", "GeneticAgent",
+    "GpBoAgent", "RandomWalkAgent", "ReplaySpec", "ScoreReport",
+    "SearchResult", "finalists", "load_best_configs", "rescore",
+    "save_best_configs", "search", "serving_replay", "torus_shapes",
+    "training_replay", "tuned_config", "tuned_knob",
 ]

@@ -77,7 +77,12 @@ class TrainerConfig:
     # analogue of the §2.1 dual-DMA prefetchable command queue.  Numerics
     # are identical to the sequential step (fp32 params: bitwise).
     overlap: bool = False
-    bucket_mb: float = 4.0          # bucket size target (MB of fp32 grads)
+    # bucket size target (MB of fp32 grads).  The default (None) loads
+    # the fabric autotuner's searched value from ``best_configs.json``
+    # ("train" workload entry — see ``fabric.autotune``) and falls back
+    # to the hand-tuned 4 MB when no artifact is pinned; passing any
+    # explicit number always wins (the escape hatch).
+    bucket_mb: float | None = None
     # fabric time-model backend for predicted_comm_s / the overlap
     # estimate: "analytic" (closed-form, the fast default) or "sim" (the
     # event-driven link-level FabricSim replay — same number on healthy
@@ -95,6 +100,12 @@ class TrainerConfig:
     # cluster even when this process drives fewer devices (default: the
     # mesh's own torus twin)
     torus_dims: tuple | None = None
+
+    def __post_init__(self) -> None:
+        if self.bucket_mb is None:
+            from repro.core.fabric import autotune
+            self.bucket_mb = float(
+                autotune.tuned_knob("train", "bucket_mb", 4.0))
 
 
 class Trainer:

@@ -136,10 +136,17 @@ class ServingCluster:
                  chunked_prefill: bool = False,
                  tp_axes: tuple[str, ...] | None = (),
                  net=None, sim_kw: dict | None = None,
-                 qos: fabric.QosPolicy | None = None,
+                 qos: fabric.QosPolicy | str | None = "auto",
                  fidelity: str = "packet") -> None:
         self.cfg = cfg
         self.torus = torus
+        # qos="auto" (default) consults the fabric autotuner's pinned
+        # ``best_configs.json`` ("serving" entry): a searched multi-class
+        # policy when one is pinned, the legacy single-FIFO link when not.
+        # Passing an explicit QosPolicy or None always wins.
+        self._tuned = fabric.autotune.tuned_config("serving")
+        if qos == "auto":
+            qos = self._tuned.qos() if self._tuned is not None else None
         ranks = tuple(node_ranks) if node_ranks is not None \
             else tuple(torus.all_ranks())
         if len(set(ranks)) != len(ranks):
@@ -272,8 +279,8 @@ class ServingCluster:
                        "(pending/prefilling/finished requests don't migrate)")
 
     def migrate(self, rid: int, dst_rank: int, *,
-                route_policy: str = "congestion",
-                stripe_k: int = 3) -> MigrationReport:
+                route_policy: str | None = None,
+                stripe_k: int | None = None) -> MigrationReport:
         """Live-migrate a running request's KV pages to ``dst_rank``.
 
         Decode resumes on the destination with bitwise-identical tokens;
@@ -295,7 +302,18 @@ class ServingCluster:
         reorder/settle model (``RdmaEndpoint.put_pages(stripes=...)``).
         The PUT rides the BULK traffic class: on a QoS fabric it cannot
         starve the decode-step collectives it contends with.
+
+        Both knobs default to ``None`` — resolved from the autotuner's
+        pinned ``best_configs.json`` ("serving" entry) when one exists,
+        falling back to the hand-tuned ``"congestion"`` / ``stripe_k=3``
+        otherwise.  Explicit values always win.
         """
+        if route_policy is None:
+            route_policy = (self._tuned.route_policy
+                            if self._tuned is not None else "congestion")
+        if stripe_k is None:
+            stripe_k = (self._tuned.stripe_k
+                        if self._tuned is not None else 3)
         src_node, req = self._find_running(rid)
         if dst_rank not in self.nodes:
             raise KeyError(f"no serving node at rank {dst_rank}")

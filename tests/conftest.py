@@ -20,6 +20,12 @@ import zlib
 import numpy as np
 import pytest
 
+# A stray best_configs.json (e.g. left by a local autotune run) must never
+# perturb the suite: default every test to "no pinned artifact" so the
+# legacy hand-tuned knobs stay in force.  Tests that exercise the load
+# path opt back in by monkeypatching BEST_CONFIGS to a tmp file.
+os.environ.setdefault("BEST_CONFIGS", "0")
+
 try:
     from hypothesis import settings
 
