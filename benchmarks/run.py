@@ -37,7 +37,8 @@ import numpy as np
 
 MODULES = ["apelink_eff", "dma_overlap", "tlb", "latency", "bandwidth",
            "fabric_cost", "overlap", "migration", "contention", "qos",
-           "lofamo", "nextgen", "roofline", "simscale", "autotune"]
+           "lofamo", "nextgen", "roofline", "simscale", "autotune",
+           "trace_replay"]
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

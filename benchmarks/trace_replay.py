@@ -1,0 +1,261 @@
+"""Production trace replay at cluster scale — SLO-aware serving on the
+fluid fabric tier (the regime arXiv:1102.3796 sizes APEnet+ for:
+hundreds of nodes on a 3D torus, latency-critical traffic sharing links
+with bulk state movement).
+
+The workload is ``serving.trace``: a seeded heavy-tailed synthetic trace
+(diurnal arrival rate, Poisson bursts, Zipf prompt/output lengths,
+session reuse with warm prefixes) replayed through ``ServingCluster`` in
+modelled mode — compute priced analytically at 2*N/F per token, every
+KV-page migration and TP flow priced by the shared fabric timeline.
+
+Gated claims:
+
+1. **``smoke_proactive_gain`` / ``full_proactive_gain``** (higher):
+   the SLO-aware proactive rebalancer (predicted-breach detection +
+   ``best_route``-probed striped migration) beats the reactive
+   ``rebalance(threshold=2)`` baseline by >= 1.15x on p99 per-token
+   decode latency, on the identical seeded trace.
+2. **``smoke_ttft_*`` / ``smoke_tpt_p99_s``** (lower): absolute SLO
+   tails on the 16-node smoke — the regression surface for the
+   admission/queueing/rebalance path.
+3. **``smoke_shed_rate``** (lower): under 1.3x overload with a short
+   queue, SLO admission sheds deterministically; the proactive
+   rebalancer must keep the shed rate from regressing.
+4. **``smoke_tier_maxerr``** (lower): fluid-vs-hybrid replay metrics
+   agree within 10% — fabric pricing feeds the tails through migration
+   PUT completion, so this is a live differential, not an identity.
+5. **``smoke_determinism_delta``**: same seed => bitwise-identical
+   trace and replay metrics (two full independent replays compared).
+
+``TRACE_FAST=1`` (the CI fast lane) skips the 512-node (8x8x8) full
+replay; the nightly lane runs it: >= 1000 requests settled on the fluid
+tier, with its own gated tails and wall budget.  Lane-prefixed metric
+names (``smoke_*`` vs ``full_*``) keep fast and nightly snapshots
+diffing cleanly through ``scripts/bench_gate.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+from repro.configs import get_config
+from repro.core.topology import Torus
+from repro.serving.cluster import ServingCluster, SloPolicy
+from repro.serving.trace import TraceConfig, generate_trace, replay
+
+N_PARAMS = 7.0e9
+T_TOK_S = 2.0 * N_PARAMS / 1.6e12     # analytic decode step, 8.75 ms
+TOKENS_PER_REQ = 50.8                 # E[cold prefill + output] of the
+                                      # default Zipf mix (measured)
+
+SMOKE_DIMS = (4, 4)
+SMOKE_SEED = 11
+FULL_DIMS = (8, 8, 8)                 # 512 nodes
+FULL_SEED = 7
+FULL_REQUESTS = 1200
+
+SMOKE_BUDGET_MS = 60_000.0            # fast-lane wall budget (all smoke
+                                      # replays together)
+FULL_BUDGET_MS = 90_000.0             # per-mode budget for the 512-node
+                                      # replay
+GAIN_BAR = 1.15                       # proactive vs reactive tpt p99
+
+
+def _cluster(dims, *, fidelity="fluid", queue_limit=256,
+             max_queue_wait_s=1.0) -> ServingCluster:
+    return ServingCluster(
+        get_config("deepseek-7b"), None, torus=Torus(dims),
+        modelled=True, n_params=N_PARAMS, tp_axes=(), fidelity=fidelity,
+        max_batch=4, max_seq=576, page_tokens=16, chunked_prefill=True,
+        slo=SloPolicy(token_target_s=0.066, queue_limit=queue_limit,
+                      max_queue_wait_s=max_queue_wait_s),
+    )
+
+
+def _trace(n_requests, n_nodes, util, seed):
+    """Size the arrival rate to a target utilisation of the cluster's
+    aggregate analytic token throughput; two diurnal cycles per trace."""
+    rate = util * n_nodes / (T_TOK_S * TOKENS_PER_REQ)
+    return generate_trace(TraceConfig(
+        n_requests=n_requests, seed=seed, base_rate=rate,
+        diurnal_period_s=n_requests / (2 * rate),
+        burst_size=16.0, burst_rate=0.3))
+
+
+def _replay(dims, trace, mode, *, fidelity="fluid", queue_limit=256,
+            max_queue_wait_s=1.0):
+    cl = _cluster(dims, fidelity=fidelity, queue_limit=queue_limit,
+                  max_queue_wait_s=max_queue_wait_s)
+    return replay(cl, trace, rebalance=mode)
+
+
+def run() -> list[dict]:
+    fast = os.environ.get("TRACE_FAST", "0") == "1"
+    # --seed threads through $BENCH_SEED (benchmarks/run.py) as an
+    # offset so the default snapshots stay bitwise comparable
+    seed = int(os.environ.get("BENCH_SEED", "0"))
+    rows: list[dict] = []
+
+    # --- 16-node smoke: proactive vs reactive on one seeded trace ----
+    t0 = time.perf_counter()
+    n_smoke = 16
+    tr = _trace(240, n_smoke, 0.92, SMOKE_SEED + seed)
+    rea = _replay(SMOKE_DIMS, tr, "reactive", queue_limit=48)
+    pro = _replay(SMOKE_DIMS, tr, "proactive", queue_limit=48)
+    rows += [
+        {"bench": "trace_replay", "metric": "smoke_ttft_p50_s",
+         "value": pro.ttft_p50_s, "gate": "lower", "tol": 0.20,
+         "note": "median time-to-first-token, 16-node proactive replay "
+                 "(240 reqs, util 0.92)"},
+        {"bench": "trace_replay", "metric": "smoke_ttft_p99_s",
+         "value": pro.ttft_p99_s, "gate": "lower", "tol": 0.35,
+         "note": "p99 time-to-first-token, 16-node proactive replay"},
+        {"bench": "trace_replay", "metric": "smoke_tpt_p50_s",
+         "value": pro.tpt_p50_s, "gate": "lower", "tol": 0.20,
+         "note": "median per-token decode latency, proactive "
+                 f"(analytic floor {T_TOK_S * 1e3:.2f} ms)"},
+        {"bench": "trace_replay", "metric": "smoke_tpt_p99_s",
+         "value": pro.tpt_p99_s, "gate": "lower", "tol": 0.35,
+         "note": "p99 per-token decode latency, proactive"},
+        {"bench": "trace_replay", "metric": "smoke_proactive_gain",
+         "value": rea.tpt_p99_s / pro.tpt_p99_s,
+         "gate": "higher", "tol": 0.25,
+         "note": "reactive tpt p99 / proactive tpt p99 on the identical "
+                 f"trace (bar: >= {GAIN_BAR}x); reactive="
+                 f"{rea.tpt_p99_s * 1e3:.1f} ms"},
+        {"bench": "trace_replay", "metric": "smoke_migrations",
+         "value": float(pro.n_migrations),
+         "note": f"striped BULK-class KV migrations (reactive moved "
+                 f"{rea.n_migrations})"},
+    ]
+
+    # --- overload: 1.3x offered load, short queue -> deterministic
+    # shedding; admission keeps the survivors' tails bounded ----------
+    tro = _trace(160, n_smoke, 1.30, SMOKE_SEED + seed)
+    orea = _replay(SMOKE_DIMS, tro, "reactive",
+                   queue_limit=24, max_queue_wait_s=0.5)
+    opro = _replay(SMOKE_DIMS, tro, "proactive",
+                   queue_limit=24, max_queue_wait_s=0.5)
+    rows += [
+        {"bench": "trace_replay", "metric": "smoke_shed_rate",
+         "value": opro.shed_rate, "gate": "lower", "tol": 0.50,
+         "note": "shed fraction at 1.3x overload (queue_limit=24, "
+                 f"wait 0.5 s), proactive; reactive sheds "
+                 f"{orea.shed_rate:.3f}"},
+        {"bench": "trace_replay", "metric": "smoke_overload_tpt_p99_s",
+         "value": opro.tpt_p99_s, "gate": "lower", "tol": 0.35,
+         "note": "p99 per-token latency of admitted requests under "
+                 "overload, proactive"},
+    ]
+
+    # --- seeded determinism: regenerate + fully re-replay ------------
+    tr2 = _trace(240, n_smoke, 0.92, SMOKE_SEED + seed)
+    trace_delta = 0.0 if [dataclasses.astuple(r) for r in tr] == \
+        [dataclasses.astuple(r) for r in tr2] else 1.0
+    pro2 = _replay(SMOKE_DIMS, tr2, "proactive", queue_limit=48)
+    m1, m2 = pro.metrics(), pro2.metrics()
+    replay_delta = max(abs(m1[k] - m2[k]) for k in m1)
+    rows.append(
+        {"bench": "trace_replay", "metric": "smoke_determinism_delta",
+         "value": trace_delta + replay_delta,
+         "note": "same seed -> bitwise-identical trace and replay "
+                 "metrics (must be exactly 0)"})
+
+    # --- fidelity differential: hybrid replay of the same trace; the
+    # tiers couple into the tails via migration PUT completion --------
+    hyb = _replay(SMOKE_DIMS, tr, "proactive", fidelity="hybrid",
+                  queue_limit=48)
+    mh = hyb.metrics()
+    tier_err = max(abs(m1[k] - mh[k]) / m1[k]
+                   for k in ("ttft_p50_s", "ttft_p99_s",
+                             "tpt_p50_s", "tpt_p99_s"))
+    rows.append(
+        {"bench": "trace_replay", "metric": "smoke_tier_maxerr",
+         "value": tier_err, "gate": "lower", "tol": 0.50,
+         "note": "max rel. diff of latency percentiles, fluid vs "
+                 "hybrid replay (bar: <= 0.10)"})
+    smoke_wall = (time.perf_counter() - t0) * 1e3
+    rows.append(
+        {"bench": "trace_replay", "metric": "smoke_wall_ms",
+         "value": smoke_wall,
+         "note": f"all smoke replays; fast-lane budget "
+                 f"{SMOKE_BUDGET_MS:.0f} ms"})
+
+    # --- 512-node full replay (nightly lane) -------------------------
+    if not fast:
+        n_full = 1
+        for d in FULL_DIMS:
+            n_full *= d
+        trf = _trace(FULL_REQUESTS, n_full, 0.92, FULL_SEED + seed)
+        t0 = time.perf_counter()
+        frea = _replay(FULL_DIMS, trf, "reactive")
+        rea_wall = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        fpro = _replay(FULL_DIMS, trf, "proactive")
+        pro_wall = (time.perf_counter() - t0) * 1e3
+        rows += [
+            {"bench": "trace_replay", "metric": "full_ttft_p50_s",
+             "value": fpro.ttft_p50_s, "gate": "lower", "tol": 0.20,
+             "note": f"median TTFT, {n_full}-node {FULL_DIMS} fluid "
+                     f"replay of {FULL_REQUESTS} requests, proactive"},
+            {"bench": "trace_replay", "metric": "full_ttft_p99_s",
+             "value": fpro.ttft_p99_s, "gate": "lower", "tol": 0.35,
+             "note": "p99 TTFT, 512-node proactive replay"},
+            {"bench": "trace_replay", "metric": "full_tpt_p99_s",
+             "value": fpro.tpt_p99_s, "gate": "lower", "tol": 0.35,
+             "note": "p99 per-token decode latency, 512-node proactive"},
+            {"bench": "trace_replay", "metric": "full_proactive_gain",
+             "value": frea.tpt_p99_s / fpro.tpt_p99_s,
+             "gate": "higher", "tol": 0.25,
+             "note": "reactive/proactive tpt p99 at 512 nodes (bar: "
+                     f">= {GAIN_BAR}x); reactive="
+                     f"{frea.tpt_p99_s * 1e3:.1f} ms"},
+            {"bench": "trace_replay", "metric": "full_finished",
+             "value": float(fpro.n_finished),
+             "note": f"requests settled (of {FULL_REQUESTS}; shed "
+                     f"{fpro.n_shed})"},
+            {"bench": "trace_replay", "metric": "full_wall_ms",
+             "value": max(rea_wall, pro_wall),
+             "note": f"slower of the two 512-node replays (budget "
+                     f"{FULL_BUDGET_MS:.0f} ms); reactive "
+                     f"{rea_wall:.0f} ms, proactive {pro_wall:.0f} ms"},
+        ]
+    return rows
+
+
+def check(rows) -> list[str]:
+    vals = {r["metric"]: r["value"] for r in rows}
+    errs = []
+    for m in ("smoke_proactive_gain", "full_proactive_gain"):
+        if m in vals and vals[m] < GAIN_BAR:
+            errs.append(f"{m} = {vals[m]:.2f}x: proactive rebalancing "
+                        f"must beat reactive by >= {GAIN_BAR}x on p99 "
+                        "per-token latency")
+    if vals["smoke_determinism_delta"] != 0.0:
+        errs.append(f"seeded replay is not deterministic (delta = "
+                    f"{vals['smoke_determinism_delta']:.3g})")
+    if vals["smoke_tier_maxerr"] > 0.10:
+        errs.append(f"fluid-vs-hybrid replay differential "
+                    f"{vals['smoke_tier_maxerr']:.3f} exceeds the 10% "
+                    "fidelity contract")
+    if vals["smoke_shed_rate"] <= 0.0:
+        errs.append("overload scenario shed nothing — the admission "
+                    "gate is not exercising (or the trace is no longer "
+                    "overloaded)")
+    if vals["smoke_wall_ms"] > SMOKE_BUDGET_MS:
+        errs.append(f"smoke replays took {vals['smoke_wall_ms']:.0f} ms, "
+                    f"over the {SMOKE_BUDGET_MS:.0f} ms fast-lane budget")
+    if "full_wall_ms" in vals and vals["full_wall_ms"] > FULL_BUDGET_MS:
+        errs.append(f"512-node replay took {vals['full_wall_ms']:.0f} ms, "
+                    f"over the {FULL_BUDGET_MS:.0f} ms budget")
+    if "full_finished" in vals and vals["full_finished"] < 1000:
+        errs.append(f"only {vals['full_finished']:.0f} requests settled "
+                    "at 512 nodes (need >= 1000 for the scale claim)")
+    return errs
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['bench']},{r['metric']},{r['value']}")

@@ -80,10 +80,12 @@ if [ "$LANE" = "fast" ]; then
         python -m pytest -x -q -m "not slow"
     # quick benches: simscale smoke skips the packet baseline; the
     # autotune smoke caps the design-space search at 20 fluid steps
-    # (seeded, genetic agent only) with the winner still packet-verified
-    step "benches-quick" env SIMSCALE_FAST=1 AUTOTUNE_FAST=1 \
+    # (seeded, genetic agent only) with the winner still packet-verified;
+    # the trace-replay smoke (TRACE_FAST=1) runs the 16-node SLO replay
+    # and skips the 512-node nightly-scale one
+    step "benches-quick" env SIMSCALE_FAST=1 AUTOTUNE_FAST=1 TRACE_FAST=1 \
         python -m benchmarks.run overlap dma_overlap fabric_cost \
-        migration contention qos simscale autotune
+        migration contention qos simscale autotune trace_replay
 else
     step "tests-full" python -m pytest -x -q
     if [ "$LANE" = "nightly" ]; then

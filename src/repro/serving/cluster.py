@@ -48,6 +48,7 @@ live traffic (``route_policy="congestion"``), not hop count;
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Iterable, Sequence
 
@@ -60,7 +61,8 @@ from repro.core.apelink import NetModel
 from repro.core.hw import PAPER_GPU_EFF_FLOPS as GPU_EFF_FLOPS
 from repro.core.topology import Torus
 from repro.models.common import ArchCfg
-from repro.serving.engine import Engine, PagedLM, Request
+from repro.serving.engine import (Engine, PagedLM, Request,
+                                  TruncatedRunError)
 
 
 def reprefill_stall_s(n_params: int, context_tokens: int,
@@ -108,6 +110,36 @@ class MigrationReport:
         return self.modelled_s / self.isolated_s if self.isolated_s else 1.0
 
 
+@dataclasses.dataclass(frozen=True)
+class SloPolicy:
+    """Serving-level objectives + the knobs that defend them.
+
+    Attaching one (``ServingCluster(slo=...)``) switches the router to
+    *capacity-aware* admission: a request only lands on a node whose free
+    slots AND free KV pages (net of what its queued requests will claim,
+    and of ``min_free_pages`` headroom) can actually hold it; otherwise
+    it waits in a cluster-level admission queue, and is **shed** when the
+    queue overflows ``queue_limit`` or it has waited ``max_queue_wait_s``
+    on the shared timeline.  Without a policy the router keeps the legacy
+    least-loaded behaviour bit-for-bit.
+
+    ``token_target_s`` is the per-token decode-latency SLO the proactive
+    rebalancer defends: it acts when a node's *predicted* next-window
+    per-token latency crosses ``token_target_s * headroom`` — before the
+    breach, not after the p99 already moved.
+    """
+
+    ttft_target_s: float = 0.5       # reported against, not enforced
+    token_target_s: float = 0.05     # per-token decode latency SLO
+    headroom: float = 0.8            # act at target*headroom (pre-breach)
+    queue_limit: int = 256           # admission queue cap; overflow sheds
+    max_queue_wait_s: float = 2.0    # queued longer than this sheds
+    min_free_pages: int = 0          # per-node KV page headroom kept free
+    max_moves_per_window: int = 4    # proactive migration budget
+    probe_dsts: int = 2              # destinations probed per candidate
+    max_migration_s: float | None = None   # skip moves probed slower
+
+
 @dataclasses.dataclass
 class ClusterNode:
     """One serving node: a torus rank owning a model replica."""
@@ -137,9 +169,19 @@ class ServingCluster:
                  tp_axes: tuple[str, ...] | None = (),
                  net=None, sim_kw: dict | None = None,
                  qos: fabric.QosPolicy | str | None = "auto",
-                 fidelity: str = "packet") -> None:
+                 fidelity: str = "packet",
+                 modelled: bool = False,
+                 n_params: int | float | None = None,
+                 slo: SloPolicy | None = None) -> None:
         self.cfg = cfg
         self.torus = torus
+        # ``modelled=True`` builds accounting-only replicas (no K/V
+        # tensors, no jit) — the trace-replay mode; ``n_params`` must
+        # then be given explicitly (there are no real params to count)
+        # so the analytic compute model prices decode windows.
+        if modelled and not n_params:
+            raise ValueError("modelled=True needs an explicit n_params "
+                             "(no real params to size the compute model)")
         # qos="auto" (default) consults the fabric autotuner's pinned
         # ``best_configs.json`` ("serving" entry): a searched multi-class
         # policy when one is pinned, the legacy single-FIFO link when not.
@@ -174,13 +216,21 @@ class ServingCluster:
             lm = PagedLM(cfg, params, max_batch=max_batch, max_seq=max_seq,
                          page_tokens=page_tokens, pool_pages=pool_pages,
                          torus=torus, tp_axes=tp_axes, rank=r,
-                         sim=self.sim, net=self.net)
+                         sim=self.sim, net=self.net, modelled=modelled)
             self.nodes[r] = ClusterNode(
                 r, lm, Engine(lm, chunked_prefill=chunked_prefill))
+        self.page_tokens = page_tokens
         self.page_nbytes = (page_tokens
                             * self.nodes[ranks[0]].lm.bytes_per_token)
-        self.n_params = sum(int(np.prod(x.shape))
-                            for x in jax.tree.leaves(params))
+        if n_params is None:
+            n_params = sum(int(np.prod(x.shape))
+                           for x in jax.tree.leaves(params))
+        self.n_params = int(n_params)
+        self.modelled = modelled
+        self.slo = slo
+        self.admission_queue: collections.deque[Request] = \
+            collections.deque()
+        self.shed: list[Request] = []
         self.faults = fabric.FaultMap()
         self.migrations: list[MigrationReport] = []
         self._window_start = 0.0
@@ -212,12 +262,104 @@ class ServingCluster:
             node.lm.relower_tp(self.faults)
 
     # -- router -----------------------------------------------------------------
-    def submit(self, req: Request) -> int:
-        """Admit to the least-loaded node (stable tie-break: lowest rank);
-        returns the chosen rank."""
-        node = min(self.nodes.values(), key=lambda n: (n.load, n.rank))
+    @property
+    def t_token_s(self) -> float:
+        """Analytic decode cost of one token on one replica (2 FLOPs per
+        param per token at the paper-era effective rate)."""
+        return 2.0 * self.n_params / GPU_EFF_FLOPS
+
+    def _pages_needed(self, req: Request) -> int:
+        return -(-(len(req.prompt) + req.max_new_tokens)
+                 // self.page_tokens)
+
+    def _can_host(self, node: ClusterNode, req: Request) -> bool:
+        """Capacity check for SLO admission: a free slot AND enough free
+        KV pages once the node's already-queued requests (which WILL
+        claim theirs first) and the policy's headroom are netted out.
+        ``Engine.load`` alone can't see pool pressure — two nodes with
+        equal load can differ by a whole pool of committed pages."""
+        eng = node.engine
+        occupied = (len(eng.running) + len(eng.prefilling)
+                    + len(eng.pending))
+        if occupied >= node.lm.max_batch:
+            return False
+        reserved = sum(self._pages_needed(r) for r in eng.pending)
+        free = (len(node.lm.allocator.free) - reserved
+                - self.slo.min_free_pages)
+        return free >= self._pages_needed(req)
+
+    def submit(self, req: Request, *,
+               prefer: int | None = None) -> int | None:
+        """Route one request.
+
+        Legacy mode (no ``slo``): admit to the least-loaded node (stable
+        tie-break: lowest rank) unconditionally; returns the chosen rank.
+
+        SLO mode: ``prefer`` (a session's home node — its modelled prefix
+        cache holds ``req.warm_tokens``) wins when it has capacity;
+        otherwise least-loaded among nodes that pass ``_can_host``.  A
+        request routed away from its home node re-prefills cold
+        (``warm_tokens`` is zeroed).  With no capacity anywhere the
+        request queues — or is shed when the queue is past
+        ``queue_limit`` — and ``None`` is returned.
+        """
+        if req.arrival_s is None:
+            req.arrival_s = self.sim.now
+        if self.slo is None:
+            node = min(self.nodes.values(), key=lambda n: (n.load, n.rank))
+            node.engine.submit(req)
+            return node.rank
+        node = None
+        if prefer is not None and prefer in self.nodes \
+                and self._can_host(self.nodes[prefer], req):
+            node = self.nodes[prefer]
+        else:
+            fits = [n for n in self.nodes.values()
+                    if self._can_host(n, req)]
+            if fits:
+                node = min(fits, key=lambda n: (n.load, n.rank))
+        if node is None:
+            if len(self.admission_queue) >= self.slo.queue_limit:
+                req.shed_s = self.sim.now
+                self.shed.append(req)
+            else:
+                self.admission_queue.append(req)
+            return None
+        if prefer is not None and node.rank != prefer:
+            req.warm_tokens = 0   # prefix cache is home-node-local
         node.engine.submit(req)
+        req.admit_s = self.sim.now
         return node.rank
+
+    def _drain_admission(self) -> int:
+        """Re-try the queued requests against current capacity (called at
+        each window boundary): place what now fits, shed what has waited
+        past ``max_queue_wait_s``.  FIFO with head-of-line skip — a short
+        request behind a long one may be placed first; the wait cap
+        bounds the starvation that trade accepts."""
+        if self.slo is None or not self.admission_queue:
+            return 0
+        now = self.sim.now
+        placed = 0
+        keep: collections.deque[Request] = collections.deque()
+        while self.admission_queue:
+            req = self.admission_queue.popleft()
+            if now - (req.arrival_s or 0.0) > self.slo.max_queue_wait_s:
+                req.shed_s = now
+                self.shed.append(req)
+                continue
+            fits = [n for n in self.nodes.values()
+                    if self._can_host(n, req)]
+            if fits:
+                node = min(fits, key=lambda n: (n.load, n.rank))
+                req.warm_tokens = 0   # queue wait forfeits the warm prefix
+                node.engine.submit(req)
+                req.admit_s = now
+                placed += 1
+            else:
+                keep.append(req)
+        self.admission_queue = keep
+        return placed
 
     def step(self) -> None:
         """One engine step on every node — one *logical window* of the
@@ -226,6 +368,7 @@ class ServingCluster:
         stats), so a ``migrate()`` issued between steps lands in the same
         window and contends with the decode traffic already in flight."""
         self._close_window()
+        self._drain_admission()
         self._window_start = self.sim.now
         self._window_open = True
         for node in self.nodes.values():
@@ -233,34 +376,64 @@ class ServingCluster:
 
     def _close_window(self) -> None:
         """Settle the open window: resolve every node's injected flows,
-        then advance the shared clock past both the contention-priced comm
-        and the modelled decode compute of the busiest node."""
+        advance the shared clock past both the contention-priced comm and
+        the modelled decode compute of the busiest node, and stamp the
+        per-request SLO times (first token / finish) with each node's own
+        window end — a hot node's tokens genuinely land later than a cold
+        node's in the same window, which is exactly the tail the SLO
+        metrics must see."""
         if not self._window_open:
             return
         self._window_open = False
         ws = self._window_start
+        t_tok = self.t_token_s
         end = ws
         for node in self.nodes.values():
-            end = max(end, node.engine.settle_comm(ws))
-        busiest = max((len(n.engine.running) for n in self.nodes.values()),
-                      default=0)
-        end = max(end, ws + 2.0 * self.n_params * busiest / GPU_EFF_FLOPS)
+            eng = node.engine
+            comm_end = eng.settle_comm(ws)
+            # per-node compute: every decoded token, plus (modelled lms
+            # only) the cold prefill tokens admitted this window — the
+            # real prefill path measures its own wall time instead
+            tokens = (eng.window_decode_tokens
+                      + eng.window_cold_prefill_tokens)
+            node_end = max(comm_end, ws + t_tok * tokens)
+            end = max(end, node_end)
+            for req in eng.window_first:
+                if req.first_token_s is None:
+                    req.first_token_s = node_end
+            for req in eng.window_finished:
+                req.finish_s = node_end
+            eng.window_first = []
+            eng.window_finished = []
         self.sim.advance(end)
         # the window's finishes are all accounted for: drop the settled
         # flows so the long-lived timeline (and every route probe's copy
         # of it) stays O(in-flight), not O(uptime)
         self.sim.prune()
 
+    def settle(self) -> None:
+        """Close the open window (if any) — public seam for drivers
+        (trace replay) that interleave their own work between steps and
+        must settle the last window without another engine step."""
+        self._close_window()
+
     def run_to_completion(self, max_steps: int = 10_000) -> None:
+        """Step until nothing is in flight.  Raises ``TruncatedRunError``
+        when ``max_steps`` windows pass with requests still in flight —
+        the silently-truncated alternative corrupts exactly the p99 tail
+        a long replay exists to measure."""
         steps = 0
         while self.in_flight and steps < max_steps:
             self.step()
             steps += 1
         self._close_window()
+        if self.in_flight:
+            raise TruncatedRunError(steps, self.in_flight)
 
     @property
     def in_flight(self) -> int:
-        return sum(n.load for n in self.nodes.values())
+        return (sum(n.load for n in self.nodes.values())
+                + len(self.admission_queue))
 
     @property
     def finished(self) -> list[Request]:
@@ -391,23 +564,169 @@ class ServingCluster:
     def rebalance(self, threshold: int = 2) -> MigrationReport | None:
         """Migrate one running request from the most- to the least-loaded
         node when the load gap reaches ``threshold``; returns the report
-        (or None when balanced / nothing migratable)."""
+        (or None when balanced / nothing migratable).
+
+        A full destination is not "balanced": when the idlest node's
+        pool/slots reject the move (``RuntimeError``), the next-idlest
+        destination is tried, then the next candidate request — the old
+        single-shot ``return None`` left a glaring gap standing whenever
+        the one preferred destination happened to be page-starved."""
         busiest = max(self.nodes.values(), key=lambda n: (n.load, -n.rank))
         idlest = min(self.nodes.values(), key=lambda n: (n.load, n.rank))
         if busiest.rank == idlest.rank \
                 or busiest.load - idlest.load < threshold \
                 or not busiest.engine.running:
             return None
-        # move the request with the most decode work left — it amortises
-        # the wire cost over the largest avoided future imbalance
-        req = max(busiest.engine.running.values(),
-                  key=lambda r: r.max_new_tokens - len(r.out_tokens))
-        try:
-            return self.migrate(req.rid, idlest.rank)
-        except fabric.UnroutableError:
-            raise   # a partitioned fabric is NOT "balanced" — surface it
-        except RuntimeError:
-            return None   # destination pool/slots full: stay put
+        # candidates: most decode work left first — it amortises the wire
+        # cost over the largest avoided future imbalance
+        cands = sorted(busiest.engine.running.values(),
+                       key=lambda r: (-(r.max_new_tokens
+                                        - len(r.out_tokens)), r.rid))
+        # destinations: idlest first, but only while the move still
+        # closes a meaningful gap (moving to a node one short of the
+        # source just swaps the hotspot)
+        dsts = sorted((n for n in self.nodes.values()
+                       if n.rank != busiest.rank
+                       and busiest.load - n.load >= threshold),
+                      key=lambda n: (n.load, n.rank))
+        for req in cands:
+            for dst in dsts:
+                try:
+                    return self.migrate(req.rid, dst.rank)
+                except fabric.UnroutableError:
+                    raise   # a partitioned fabric is NOT "balanced"
+                except RuntimeError:
+                    continue   # dst pool/slots full: try the next one
+        return None   # nothing migratable fits anywhere: stay put
+
+    def _predicted_window_tokens(self, node: ClusterNode) -> int:
+        """Compute tokens ``node``'s next engine step will carry: one per
+        active decode, plus each prefilling request's next chunk (the
+        whole cold remainder when prefill is monolithic), plus the first
+        chunk of whatever admission will pull in from the local queue.
+        Chunk-accurate: charging a queued prompt's entire cold prefill to
+        one window would make every node with a queue look molten and
+        every chunk-prefilling node look idle — exactly backwards."""
+        eng = node.engine
+        chunk = eng.chunk_tokens if eng.chunked_prefill else None
+        toks = sum(1 for r in eng.running.values() if not r.done)
+        for r in eng.prefilling.values():
+            pos = r.pos if r.pos > 0 \
+                else min(max(r.warm_tokens, 0), len(r.prompt))
+            rem = max(len(r.prompt) - pos, 0)
+            toks += min(chunk, rem) if chunk is not None else rem
+        slots_free = (node.lm.max_batch - len(eng.running)
+                      - len(eng.prefilling))
+        for r in eng.pending[:max(slots_free, 0)]:
+            cold = max(len(r.prompt) - max(r.warm_tokens, 0), 0)
+            toks += min(chunk, cold) if chunk is not None else cold
+        return toks
+
+    def _predicted_token_latency(self, node: ClusterNode) -> float:
+        """Predicted per-token decode latency of ``node``'s next window:
+        analytic compute for the window's tokens vs the node's
+        quiet-fabric TP comm floor — the pre-breach signal the proactive
+        rebalancer acts on."""
+        return max(self.t_token_s * self._predicted_window_tokens(node),
+                   node.lm.predicted_tp_comm_s)
+
+    def rebalance_proactive(self, max_moves: int | None = None
+                            ) -> list[MigrationReport]:
+        """SLO-defending rebalance: striped-migrate running requests off
+        any node whose *predicted* next-window per-token latency exceeds
+        ``token_target_s * headroom`` — before the p99 breach, not after.
+
+        Unlike ``rebalance`` this is not load-count arithmetic: the
+        trigger is the latency prediction, the destination must keep
+        enough predicted headroom to absorb the request, and among the
+        ``probe_dsts`` least-loaded-by-prediction destinations the one
+        with the least *probed* PUT completion time on the live fabric
+        wins (``fabric.best_route`` against current traffic, BULK class)
+        — a destination behind a congested link is passed over even when
+        its compute is idle.  Moves are capped at ``max_moves_per_window``
+        and each PUT stripes across multi-path routes; a move whose
+        probed wire time exceeds ``max_migration_s`` (when set) is
+        skipped — it could not complete ahead of the breach it is meant
+        to prevent.
+        """
+        if self.slo is None:
+            raise ValueError("rebalance_proactive needs an SloPolicy "
+                             "(ServingCluster(slo=...))")
+        slo = self.slo
+        budget = slo.token_target_s * slo.headroom
+        limit = slo.max_moves_per_window if max_moves is None else max_moves
+        t_tok = self.t_token_s
+        pred = {r: self._predicted_token_latency(n)
+                for r, n in self.nodes.items()}
+        reports: list[MigrationReport] = []
+        hot = sorted((n for n in self.nodes.values()
+                      if pred[n.rank] > budget),
+                     key=lambda n: (-pred[n.rank], n.rank))
+        for node in hot:
+            while (len(reports) < limit and pred[node.rank] > budget
+                   and node.engine.running):
+                cands = sorted(
+                    (r for r in node.engine.running.values()
+                     if not r.done),
+                    key=lambda r: (-(r.max_new_tokens
+                                     - len(r.out_tokens)), r.rid))
+                moved = None
+                for req in cands:
+                    nbytes = (-(-max(req.pos, 1) // self.page_tokens)
+                              * self.page_nbytes)
+                    # destinations that keep predicted headroom after
+                    # absorbing one more decode stream, best-predicted
+                    # first; the top few are probed on the live fabric
+                    dsts = sorted(
+                        (d for d in self.nodes.values()
+                         if d.rank != node.rank
+                         and pred[d.rank] + t_tok <= budget),
+                        key=lambda d: (pred[d.rank], d.rank))
+                    probed = []
+                    for d in dsts[:max(slo.probe_dsts, 1)]:
+                        try:
+                            _, wire = fabric.best_route(
+                                self.sim, node.rank, d.rank, nbytes,
+                                faults=self.faults,
+                                cls=fabric.TrafficClass.BULK)
+                        except fabric.UnroutableError:
+                            continue
+                        if slo.max_migration_s is not None \
+                                and wire > slo.max_migration_s:
+                            continue
+                        probed.append((wire, d.rank, d))
+                    for _, _, d in sorted(probed,
+                                          key=lambda x: (x[0], x[1])):
+                        try:
+                            moved = self.migrate(req.rid, d.rank,
+                                                 route_policy="striped")
+                            break
+                        except fabric.UnroutableError:
+                            raise
+                        except RuntimeError:
+                            continue   # dst filled up since the probe
+                    if moved is not None:
+                        break
+                if moved is None:
+                    break   # nothing migratable fits anywhere cooler
+                reports.append(moved)
+                pred[node.rank] = self._predicted_token_latency(node)
+                pred[moved.dst] = self._predicted_token_latency(
+                    self.nodes[moved.dst])
+        return reports
+
+    def slo_stats(self) -> dict:
+        """SLO-layer counters (admission + per-class fabric bytes) — the
+        latency percentiles themselves live in ``serving.trace``, which
+        owns the request population."""
+        cs = self.sim.class_stats()
+        return {
+            "queued": len(self.admission_queue),
+            "shed": len(self.shed),
+            "class_bytes": {cls.name: float(v) for cls, v in cs.items()},
+            "n_migrations": len(self.migrations),
+            "migrated_bytes": sum(m.nbytes for m in self.migrations),
+        }
 
     # -- reporting --------------------------------------------------------------
     def stats(self) -> dict:

@@ -38,6 +38,21 @@ from repro.models import transformer
 from repro.models.common import ArchCfg
 
 
+class TruncatedRunError(RuntimeError):
+    """``run_to_completion`` exhausted ``max_steps`` with requests still
+    in flight.  Returning silently here would quietly truncate exactly
+    the tail of a long replay — the p99 requests are the ones still in
+    flight — so the driver raises and carries the evidence."""
+
+    def __init__(self, steps: int, in_flight: int) -> None:
+        super().__init__(
+            f"run_to_completion truncated after {steps} steps with "
+            f"{in_flight} request(s) still in flight (raise max_steps, "
+            "or drain the admission queue)")
+        self.steps = steps
+        self.in_flight = in_flight
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -46,6 +61,20 @@ class Request:
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     slot: int | None = None
     pos: int = 0                 # current context length
+    # -- trace-replay / SLO surface (all optional; the engine never
+    #    requires them).  Times are on the cluster's shared fabric
+    #    timeline (seconds); ``warm_tokens`` is the prefix the node's
+    #    modelled prefix cache already holds (a session follow-up routed
+    #    to its home node skips that much prefill compute — modelled
+    #    accounting only, the real prefill path ignores it).
+    arrival_s: float | None = None
+    admit_s: float | None = None       # left the admission queue
+    first_token_s: float | None = None  # end of the window that produced
+    #                                     the first output token (TTFT)
+    finish_s: float | None = None
+    shed_s: float | None = None        # admission gave up (SLO shed)
+    warm_tokens: int = 0
+    session: int = -1                  # trace session id (-1: none)
 
     @property
     def done(self) -> bool:
@@ -92,18 +121,25 @@ class SlotState:
     ``max_new`` headroom pages never touch the wire; the importer claims
     all ``n_alloc`` pages fresh from its own pool (physical page ids are
     a node-local detail and do NOT travel).
+
+    A *modelled* node (``PagedLM(modelled=True)``) exports ``k = v =
+    None`` with ``n_live`` carrying the page count: the wire payload is
+    priced identically, only the tensor contents are absent.
     """
 
-    k: jax.Array
-    v: jax.Array
+    k: jax.Array | None
+    v: jax.Array | None
     seq_len: int
     page_tokens: int
     n_alloc: int                 # total pages the importer must claim
     nbytes: int                  # wire payload (live page contents only)
+    n_live: int = -1             # live page count when k is None
 
     @property
     def n_pages(self) -> int:
         """Live pages on the wire (<= n_alloc)."""
+        if self.k is None:
+            return int(self.n_live)
         return int(self.k.shape[1])
 
 
@@ -116,6 +152,14 @@ class PagedLM:
     deployment — default: one axis per torus dimension; pass ``()`` for a
     single-card replica whose fabric traffic is only inter-node
     (migration) RDMA.
+
+    ``modelled=True`` keeps the whole control plane — slots, page
+    allocator, TLB registration, export/import, RDMA endpoint — but
+    allocates no K/V tensors and compiles no kernels: decode/prefill
+    become pure accounting (tokens are placeholders, compute is priced
+    analytically by the window owner).  This is what lets a 512-node
+    trace replay drive the real router/admission/migration machinery
+    without 512 live model replicas.
     """
 
     def __init__(self, cfg: ArchCfg, params, *, max_batch: int,
@@ -126,10 +170,12 @@ class PagedLM:
                  rank: int = 0, net: NetModel | None = None,
                  sim: fabric.FabricSim | None = None,
                  cost_backend: str = "analytic",
-                 cost_fidelity: str = "packet") -> None:
+                 cost_fidelity: str = "packet",
+                 modelled: bool = False) -> None:
         assert cfg.family in ("dense", "moe", "vlm")
         self.cfg = cfg
         self.params = params
+        self.modelled = modelled
         self.page = page_tokens
         self.max_batch = max_batch
         self.pages_per_seq = -(-max_seq // page_tokens)
@@ -137,9 +183,13 @@ class PagedLM:
         self.n_pages = pool_pages or int(need * 1.25)
         hd = cfg.resolved_head_dim
         L = cfg.n_layers
-        self.k_pool = jnp.zeros((L, self.n_pages, page_tokens,
-                                 cfg.n_kv_heads, hd), cfg.dtype)
-        self.v_pool = jnp.zeros_like(self.k_pool)
+        if modelled:
+            self.k_pool = None
+            self.v_pool = None
+        else:
+            self.k_pool = jnp.zeros((L, self.n_pages, page_tokens,
+                                     cfg.n_kv_heads, hd), cfg.dtype)
+            self.v_pool = jnp.zeros_like(self.k_pool)
         self.page_table = np.zeros((max_batch, self.pages_per_seq), np.int32)
         self.seq_lens = np.zeros((max_batch,), np.int32)
         self.torus = torus or Torus((4, 4))
@@ -190,9 +240,14 @@ class PagedLM:
             self.tp_step_bytes = 0
             self.predicted_tp_comm_s = 0.0
         self.slot_pages: dict[int, list[int]] = {}
-        self._decode = jax.jit(self._decode_impl)
-        self._prefill = jax.jit(self._prefill_impl)
-        self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
+        if modelled:
+            self._decode = None
+            self._prefill = None
+            self._prefill_chunk = None
+        else:
+            self._decode = jax.jit(self._decode_impl)
+            self._prefill = jax.jit(self._prefill_impl)
+            self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
 
     # -- fault feed -------------------------------------------------------------
     def relower_tp(self, faults) -> bool:
@@ -271,6 +326,14 @@ class PagedLM:
     def export_slot(self, slot: int) -> SlotState:
         """Snapshot a slot's live KV pages (logical order) + seq_len."""
         live = np.asarray(self.live_pages(slot), np.int32)
+        if self.modelled:
+            # no tensor contents to snapshot — the wire payload (and the
+            # importer's page claim) are priced from the counts alone
+            return SlotState(
+                k=None, v=None,
+                seq_len=int(self.seq_lens[slot]), page_tokens=self.page,
+                n_alloc=len(self.slot_pages[slot]), n_live=len(live),
+                nbytes=len(live) * self.page * self.bytes_per_token)
         return SlotState(
             k=self.k_pool[:, live], v=self.v_pool[:, live],
             seq_len=int(self.seq_lens[slot]), page_tokens=self.page,
@@ -291,7 +354,7 @@ class PagedLM:
             raise ValueError(f"corrupt slot state: {state.n_pages} live "
                              f"pages > {state.n_alloc} allocated")
         slot = self._claim(state.n_alloc)
-        if state.n_pages:
+        if state.n_pages and not self.modelled and state.k is not None:
             live = jnp.asarray(self.slot_pages[slot][:state.n_pages],
                                jnp.int32)
             self.k_pool = self.k_pool.at[:, live].set(state.k)
@@ -521,6 +584,15 @@ class Engine:
         self.pending_comm_fids: list[int] = []
         self.sim_tp_comm_s = 0.0    # settled, contention-priced TP comm
         self.sim_comm_steps = 0
+        # per-window SLO accounting, consumed (and cleared) by the
+        # cluster's window close: which requests produced their first
+        # token / finished this window, and how much compute the window
+        # carried (decode tokens everywhere; cold prefill tokens only on
+        # a modelled lm — the real prefill path measures itself)
+        self.window_first: list[Request] = []
+        self.window_finished: list[Request] = []
+        self.window_decode_tokens = 0
+        self.window_cold_prefill_tokens = 0
 
     @property
     def load(self) -> int:
@@ -565,15 +637,28 @@ class Engine:
                 req.pos = 0
                 self.prefilling[slot] = req
             else:
-                first = self.lm.prefill_slot(slot, req.prompt)
+                if self.lm.modelled:
+                    # accounting-only prefill: a session follow-up on its
+                    # home node skips the warm prefix (modelled prefix
+                    # cache); the cold remainder is charged to the window
+                    warm = min(max(req.warm_tokens, 0), len(req.prompt))
+                    self.window_cold_prefill_tokens += \
+                        len(req.prompt) - warm
+                    self.lm.seq_lens[slot] = len(req.prompt)
+                    first = 0
+                else:
+                    first = self.lm.prefill_slot(slot, req.prompt)
                 req.out_tokens.append(first)
                 req.pos = len(req.prompt)
                 self.running[slot] = req
+                self.window_first.append(req)
         return admitted
 
     def _advance_prefills(self) -> int:
         """One page-sized chunk per prefilling request per engine step."""
         chunks = 0
+        if self.lm.modelled:
+            return self._advance_prefills_modelled()
         for slot, req in list(self.prefilling.items()):
             tok = self.lm.prefill_slot_chunk(slot, req.prompt, req.pos,
                                              self.chunk_tokens)
@@ -585,10 +670,41 @@ class Engine:
                 req.pos = len(req.prompt)
                 del self.prefilling[slot]
                 self.running[slot] = req
+                self.window_first.append(req)
+        return chunks
+
+    def _advance_prefills_modelled(self) -> int:
+        """Accounting-only chunked prefill: the warm prefix (home-node
+        prefix-cache hit) is skipped outright, each step charges one
+        chunk of the cold remainder to ``window_cold_prefill_tokens``,
+        and the request goes decode-ready when the cursor covers the
+        prompt — same admission cadence as the real chunked path."""
+        chunks = 0
+        for slot, req in list(self.prefilling.items()):
+            if req.pos == 0 and req.warm_tokens > 0:
+                req.pos = min(req.warm_tokens, len(req.prompt))
+            end = min(req.pos + self.chunk_tokens, len(req.prompt))
+            self.window_cold_prefill_tokens += end - req.pos
+            req.pos = end
+            self.prefill_chunks += 1
+            chunks += 1
+            if req.pos >= len(req.prompt):
+                self.lm.seq_lens[slot] = len(req.prompt)
+                req.out_tokens.append(0)
+                req.pos = len(req.prompt)
+                del self.prefilling[slot]
+                self.running[slot] = req
+                self.window_first.append(req)
         return chunks
 
     def step(self) -> None:
         t0 = time.perf_counter()
+        # fresh window accounting: the cluster steps each engine exactly
+        # once per logical window and reads these at window close
+        self.window_first = []
+        self.window_finished = []
+        self.window_decode_tokens = 0
+        self.window_cold_prefill_tokens = 0
         had_batch = bool(self.running)
         worked = self._admit()
         if self.chunked_prefill:
@@ -602,12 +718,16 @@ class Engine:
             self.decode_stall_s += time.perf_counter() - t0
         if not self.running:
             return
+        if self.lm.modelled:
+            self._step_modelled(t0)
+            return
         B = self.lm.max_batch
         tokens = np.zeros((B,), np.int32)
         active = np.zeros((B,), bool)
         for slot, req in self.running.items():
             tokens[slot] = req.out_tokens[-1]
             active[slot] = not req.done
+        self.window_decode_tokens += int(active.sum())
         nxt = self.lm.decode_batch(tokens, active)
         if self.lm.sim is not None and self.lm.tp_schedule is not None:
             # this step's TP collectives enter the shared timeline at the
@@ -629,6 +749,32 @@ class Engine:
             if req.done:
                 self.lm.free_slot(slot)
                 self.finished.append(self.running.pop(slot))
+                self.window_finished.append(req)
+
+    def _step_modelled(self, t0: float) -> None:
+        """Decode step on a modelled lm: token bookkeeping only (the
+        placeholder token is 0), same batch/finish semantics as the real
+        path; the window owner prices ``window_decode_tokens`` of compute
+        analytically.  TP flows still enter the shared timeline — the
+        fabric twin is real even when the FLOPs are modelled."""
+        for slot, req in list(self.running.items()):
+            if not req.done:
+                req.out_tokens.append(0)
+                req.pos += 1
+                self.lm.seq_lens[slot] += 1
+                self.window_decode_tokens += 1
+            if req.done:
+                self.lm.free_slot(slot)
+                self.finished.append(self.running.pop(slot))
+                self.window_finished.append(req)
+        if self.lm.sim is not None and self.lm.tp_schedule is not None:
+            self.pending_comm_fids.extend(fabric.inject_schedule(
+                self.lm.sim, self.lm.tp_schedule, self.lm.tp_step_bytes,
+                start_s=self.lm.sim.now, granularity="phase",
+                cls=fabric.TrafficClass.DECODE))
+            self.sim_comm_steps += 1
+        self.steps += 1
+        self._step_times.append(time.perf_counter() - t0)
 
     def settle_comm(self, window_start: float) -> float:
         """Resolve this window's injected TP flows against the shared
@@ -650,6 +796,8 @@ class Engine:
                 and steps < max_steps:
             self.step()
             steps += 1
+        if self.pending or self.prefilling or self.running:
+            raise TruncatedRunError(steps, self.load)
 
     def stats(self) -> dict:
         alloc = self.lm.allocator

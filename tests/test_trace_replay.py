@@ -1,0 +1,304 @@
+"""Trace replay + SLO layer: seeded trace generation determinism, the
+modelled-cluster replay driver, SLO admission (queue/shed), proactive
+rebalancing, and the two driver/router regressions this PR fixes:
+
+* ``run_to_completion`` silently returning with requests still in
+  flight (now ``TruncatedRunError``) — silent truncation corrupts
+  exactly the p99 tail a replay exists to measure;
+* ``rebalance`` giving up when the single least-loaded destination was
+  slot/page-full (now it tries the next destination / candidate).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.topology import Torus
+from repro.serving.cluster import ServingCluster, SloPolicy
+from repro.serving.engine import Engine, PagedLM, Request, TruncatedRunError
+from repro.serving.trace import (TraceConfig, TraceRequest, generate_trace,
+                                 replay)
+
+N_PARAMS = 7.0e9
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return configs.get_config("deepseek-7b")
+
+
+def _cluster(cfg, **kw):
+    kw.setdefault("torus", Torus((4,)))
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 96)
+    kw.setdefault("page_tokens", 8)
+    kw.setdefault("tp_axes", ())
+    kw.setdefault("fidelity", "fluid")
+    return ServingCluster(cfg, None, modelled=True, n_params=N_PARAMS, **kw)
+
+
+def _req(rid, n_prompt=8, max_new=4, **kw):
+    return Request(rid=rid, prompt=np.zeros(n_prompt, dtype=np.int32),
+                   max_new_tokens=max_new, **kw)
+
+
+# ---------------------------------------------------------------------------
+# trace generation
+# ---------------------------------------------------------------------------
+
+def test_trace_same_seed_bitwise_identical():
+    cfg = TraceConfig(n_requests=300, seed=42)
+    a = [dataclasses.astuple(r) for r in generate_trace(cfg)]
+    b = [dataclasses.astuple(r) for r in generate_trace(cfg)]
+    assert a == b
+
+
+def test_trace_different_seed_differs():
+    a = generate_trace(TraceConfig(n_requests=100, seed=1))
+    b = generate_trace(TraceConfig(n_requests=100, seed=2))
+    assert [dataclasses.astuple(r) for r in a] \
+        != [dataclasses.astuple(r) for r in b]
+
+
+def test_trace_shape_invariants():
+    cfg = TraceConfig(n_requests=400, seed=5)
+    tr = generate_trace(cfg)
+    assert len(tr) == cfg.n_requests
+    assert all(isinstance(r, TraceRequest) for r in tr)
+    ts = [r.t for r in tr]
+    assert ts == sorted(ts) and ts[0] >= 0.0
+    assert [r.rid for r in tr] == list(range(cfg.n_requests))
+    sessions = {}
+    for r in tr:
+        assert cfg.output_min <= r.output_tokens <= cfg.output_max
+        assert r.prompt_tokens >= cfg.prompt_min
+        assert r.prompt_tokens + r.output_tokens <= cfg.max_context
+        if r.turn == 0:
+            # a fresh session starts cold with a Zipf-bounded prompt
+            assert r.warm_tokens == 0
+            assert r.prompt_tokens <= cfg.prompt_max
+            assert r.session not in sessions
+        else:
+            # a continuation carries the whole prior context warm and
+            # appends the new turn's tokens on top of it
+            assert r.session in sessions
+            prev = sessions[r.session]
+            assert r.turn == prev.turn + 1
+            assert r.warm_tokens == prev.prompt_tokens + prev.output_tokens
+            assert r.prompt_tokens > r.warm_tokens
+            assert r.t >= prev.t + cfg.session_gap_s
+        sessions[r.session] = r
+    # the session mechanism must actually engage at these defaults
+    assert any(r.turn > 0 for r in tr)
+
+
+# ---------------------------------------------------------------------------
+# replay determinism + fidelity differential
+# ---------------------------------------------------------------------------
+
+def _small_trace(n=48, seed=3, util=0.9, n_nodes=4):
+    t_tok = 2.0 * N_PARAMS / 1.6e12
+    rate = util * n_nodes / (t_tok * 50.8)
+    return generate_trace(TraceConfig(
+        n_requests=n, seed=seed, base_rate=rate,
+        diurnal_period_s=n / (2 * rate)))
+
+
+def _small_cluster(cfg, fidelity="fluid"):
+    return _cluster(cfg, torus=Torus((2, 2)), max_batch=4, max_seq=576,
+                    page_tokens=16, chunked_prefill=True,
+                    fidelity=fidelity,
+                    slo=SloPolicy(token_target_s=0.066, queue_limit=64,
+                                  max_queue_wait_s=2.0))
+
+
+def test_replay_metrics_deterministic(cfg):
+    tr = _small_trace()
+    a = replay(_small_cluster(cfg), tr, rebalance="proactive").metrics()
+    b = replay(_small_cluster(cfg), tr, rebalance="proactive").metrics()
+    assert a == b
+
+
+def test_replay_fluid_vs_hybrid_within_10pct(cfg):
+    tr = _small_trace(n=80, seed=9)
+    f = replay(_small_cluster(cfg, "fluid"), tr,
+               rebalance="proactive").metrics()
+    h = replay(_small_cluster(cfg, "hybrid"), tr,
+               rebalance="proactive").metrics()
+    assert f["n_finished"] == h["n_finished"] == 80
+    for k in ("ttft_p50_s", "ttft_p99_s", "tpt_p50_s", "tpt_p99_s"):
+        assert abs(f[k] - h[k]) / f[k] <= 0.10, (k, f[k], h[k])
+
+
+def test_replay_finishes_every_request(cfg):
+    tr = _small_trace()
+    cl = _small_cluster(cfg)
+    rep = replay(cl, tr, rebalance="reactive")
+    assert rep.n_finished == len(tr) and rep.n_shed == 0
+    assert cl.in_flight == 0
+    assert rep.makespan_s > 0.0
+    # first token can't precede arrival; finish can't precede first token
+    for r in cl.finished:
+        assert r.arrival_s <= r.first_token_s <= r.finish_s
+
+
+# ---------------------------------------------------------------------------
+# bugfix 1: run_to_completion must raise on truncation, not return
+# ---------------------------------------------------------------------------
+
+def test_engine_run_to_completion_raises_on_truncation(cfg):
+    lm = PagedLM(cfg, None, max_batch=2, max_seq=96, page_tokens=8,
+                 modelled=True)
+    eng = Engine(lm)
+    eng.submit(_req(0, max_new=50))
+    with pytest.raises(TruncatedRunError) as ei:
+        eng.run_to_completion(max_steps=3)
+    assert ei.value.steps == 3 and ei.value.in_flight == 1
+    eng.run_to_completion()          # the work itself is still sound
+    assert [r.rid for r in eng.finished] == [0]
+
+
+def test_cluster_run_to_completion_raises_on_truncation(cfg):
+    cl = _cluster(cfg)
+    cl.submit(_req(0, max_new=40))
+    with pytest.raises(TruncatedRunError) as ei:
+        cl.run_to_completion(max_steps=2)
+    assert ei.value.in_flight == 1
+    cl.run_to_completion()
+    assert cl.in_flight == 0 and [r.rid for r in cl.finished] == [0]
+
+
+# ---------------------------------------------------------------------------
+# bugfix 2: rebalance must try the next destination when the idlest
+# one is full
+# ---------------------------------------------------------------------------
+
+def test_rebalance_skips_full_destination(cfg):
+    cl = _cluster(cfg, torus=Torus((4,)), node_ranks=(0, 1, 2))
+    # node 0: 2 running + 3 pending (the hotspot, load 5)
+    for i in range(5):
+        cl.nodes[0].engine.submit(_req(i, max_new=30))
+    # node 1: 2 running (slot-full at max_batch=2, but load only 2 —
+    # the pre-fix "idlest" pick, which cannot host anything)
+    for i in range(5, 7):
+        cl.nodes[1].engine.submit(_req(i, max_new=30))
+    # node 2: 1 running (free slot) ...
+    cl.nodes[2].engine.submit(_req(7, max_new=30))
+    cl.step()
+    cl.step()
+    # ... + 2 pending submitted between windows, so its load (3) sits
+    # above node 1's while a slot stays genuinely free
+    cl.nodes[2].engine.submit(_req(8, max_new=30))
+    cl.nodes[2].engine.submit(_req(9, max_new=30))
+    assert len(cl.nodes[1].engine.running) == cl.nodes[1].lm.max_batch
+    assert cl.nodes[0].load == 5 and cl.nodes[1].load == 2 \
+        and cl.nodes[2].load == 3
+    rep = cl.rebalance(threshold=2)
+    # pre-fix: the single shot at slot-full node 1 raised/gave up; now
+    # the move lands on the next destination that can actually host
+    assert rep is not None and rep.src == 0 and rep.dst == 2
+    cl.run_to_completion(max_steps=2000)
+    assert sorted(r.rid for r in cl.finished) == list(range(10))
+
+
+# ---------------------------------------------------------------------------
+# router load audit: queued-but-not-prefilling requests count
+# ---------------------------------------------------------------------------
+
+def test_pending_requests_count_toward_load(cfg):
+    lm = PagedLM(cfg, None, max_batch=1, max_seq=96, page_tokens=8,
+                 modelled=True)
+    eng = Engine(lm)
+    for i in range(3):
+        eng.submit(_req(i))
+    # nothing admitted yet — pending alone must already show as load,
+    # or the router would pile every burst onto one "empty" node
+    assert not eng.running and not eng.prefilling
+    assert eng.load == 3
+
+
+def test_router_sees_pending_load(cfg):
+    cl = _cluster(cfg, node_ranks=(0, 1), max_batch=1)
+    ranks = [cl.submit(_req(i)) for i in range(4)]
+    assert ranks == [0, 1, 0, 1]
+    assert {n.load for n in cl.nodes.values()} == {2}
+
+
+# ---------------------------------------------------------------------------
+# SLO admission: queue, shed, drain
+# ---------------------------------------------------------------------------
+
+def test_admission_queues_then_sheds(cfg):
+    cl = _cluster(cfg, node_ranks=(0,), max_batch=1,
+                  slo=SloPolicy(token_target_s=0.05, queue_limit=2,
+                                max_queue_wait_s=100.0))
+    assert cl.submit(_req(0)) == 0
+    assert cl.submit(_req(1)) is None     # queued
+    assert cl.submit(_req(2)) is None     # queued (limit reached)
+    assert cl.submit(_req(3)) is None     # shed
+    assert cl.submit(_req(4)) is None     # shed
+    assert len(cl.admission_queue) == 2 and len(cl.shed) == 2
+    assert all(r.shed_s is not None for r in cl.shed)
+    assert cl.in_flight == 3              # running + the queue, not shed
+    cl.run_to_completion(max_steps=2000)
+    assert sorted(r.rid for r in cl.finished) == [0, 1, 2]
+    assert sorted(r.rid for r in cl.shed) == [3, 4]
+
+
+def test_admission_sheds_after_wait_cap(cfg):
+    cl = _cluster(cfg, node_ranks=(0,), max_batch=1,
+                  slo=SloPolicy(token_target_s=0.05, queue_limit=8,
+                                max_queue_wait_s=0.0))
+    cl.submit(_req(0, max_new=20))
+    cl.submit(_req(1))                    # queued behind a long decode
+    cl.run_to_completion(max_steps=2000)
+    # the zero wait cap sheds it at the first window boundary
+    assert [r.rid for r in cl.finished] == [0]
+    assert [r.rid for r in cl.shed] == [1]
+
+
+def test_warm_prefix_home_node_affinity(cfg):
+    cl = _cluster(cfg, node_ranks=(0, 1), max_batch=1,
+                  slo=SloPolicy(token_target_s=0.05, queue_limit=8))
+    r0 = _req(0, n_prompt=16)
+    r0.warm_tokens = 12
+    assert cl.submit(r0, prefer=0) == 0
+    assert r0.warm_tokens == 12           # home node keeps the prefix
+    r1 = _req(1, n_prompt=16)
+    r1.warm_tokens = 12
+    assert cl.submit(r1, prefer=0) == 1   # home full -> routed away
+    assert r1.warm_tokens == 0            # prefix cache is node-local
+
+
+# ---------------------------------------------------------------------------
+# proactive rebalancer
+# ---------------------------------------------------------------------------
+
+def test_proactive_moves_before_predicted_breach(cfg):
+    # token budget 0.012*0.8 = 9.6 ms vs the 8.75 ms analytic step:
+    # two concurrent decode streams on node 0 predict a breach, one
+    # stream fits — exactly one move to the idle node is the fix
+    cl = _cluster(cfg, node_ranks=(0, 1),
+                  slo=SloPolicy(token_target_s=0.012, headroom=0.8))
+    cl.nodes[0].engine.submit(_req(0, max_new=30))
+    cl.nodes[0].engine.submit(_req(1, max_new=30))
+    cl.step()
+    cl.step()
+    assert len(cl.nodes[0].engine.running) == 2
+    budget = cl.slo.token_target_s * cl.slo.headroom
+    assert cl._predicted_token_latency(cl.nodes[0]) > budget
+    moves = cl.rebalance_proactive()
+    assert len(moves) == 1
+    assert moves[0].src == 0 and moves[0].dst == 1
+    assert cl._predicted_token_latency(cl.nodes[0]) <= budget
+    # no further predicted breach -> no further churn
+    assert cl.rebalance_proactive() == []
+    cl.run_to_completion(max_steps=2000)
+    assert sorted(r.rid for r in cl.finished) == [0, 1]
+
+
+def test_proactive_requires_slo(cfg):
+    cl = _cluster(cfg)
+    with pytest.raises(ValueError, match="SloPolicy"):
+        cl.rebalance_proactive()
