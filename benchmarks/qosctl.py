@@ -1,0 +1,313 @@
+"""Closed-loop QoS — the SLO feedback loop over the live fabric policy.
+
+Static arbitration weights (the autotuner's pick) are open-loop: under
+an overload trace they keep paying DECODE its full ~27:1 share even
+once decode is queue-bound, starving the BULK KV migrations that would
+relieve the hotspot.  ``fabric.QosController`` closes the loop: once
+per replay window it reads the measured per-token p99 and the per-class
+byte deltas (``class_stats(since=...)``) and retunes ``QosPolicy``
+through ``sim.set_qos`` — boosting DECODE only inside the SLO's
+at-risk band, releasing toward a floor when safe or breached.
+
+Gated claims:
+
+1. **``closed_loop_gain``** (higher): on an identical seeded overload
+   trace — long-context sessions (Zipf prompts 256-448 tokens, so KV
+   migrations are tens of MB), short decodes, sustained DECODE-class
+   cross-traffic injected every rebalance hook — the controller beats
+   the static autotuned weights by >= 1.10x on p99 per-token decode
+   latency.  The mechanism is *relief*: releasing the DECODE boost to
+   the floor multiplies the BULK arbitration share, migration PUTs
+   drain ~3.6x faster, and the destination nodes resume decoding
+   sooner.  ``closed_loop_ttft_ratio`` must not regress (the TTFT tail
+   is admission/prefill queueing that precedes the first retune).
+2. **``preemption_latency``** (higher): with descriptor-granular
+   command queues (``descriptor_bytes=256 KiB``) a DECODE packet
+   arriving mid-drain of a 32 MB BULK PUT waits at most one descriptor
+   at the host interface instead of the whole DMA — >= 2x drop in
+   measured wait (the §2.1 prefetchable-queue argument, measured).
+3. **``controller_quiescence_maxdiff``** (== 0): on a no-overload
+   trace the controller never fires (it is latched quiescent until the
+   first at-risk window), and the replay metrics are *bitwise
+   identical* to the same replay without a controller; ``n_retunes``
+   must be exactly 0.
+
+``QOSCTL_FAST=1`` (the CI fast lane) skips the informational
+default-weights arm; all three gated rows always run.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.configs import get_config
+from repro.core import fabric
+from repro.core.apelink import NetModel
+from repro.core.rdma import RdmaEndpoint
+from repro.core.topology import Torus
+from repro.serving.cluster import ServingCluster, SloPolicy
+from repro.serving.trace import TraceConfig, generate_trace, replay
+
+N_PARAMS = 7.0e9
+T_TOK_S = 2.0 * N_PARAMS / 1.6e12     # analytic decode step, 8.75 ms
+SMOKE_DIMS = (4, 4)
+SMOKE_SEED = 11
+
+GAIN_BAR = 1.10                       # closed-loop vs static, tpt p99
+PREEMPT_BAR = 2.0                     # mono vs descriptor probe wait
+BUDGET_MS = 200_000.0                 # whole-module wall budget
+
+# the overload scenario: long-context sessions => KV migrations of tens
+# of MB; short outputs => a migration stall is amortised over few
+# tokens; DECODE cross-traffic big enough to outlast every PUT under
+# the static weights (injected at each rebalance hook via replay's
+# ``background`` callback)
+CHUNK_BYTES = 1536e6
+HOOK_S = 0.25
+MEAN_OUT_TOK = 6.0                    # E[output] of the 4-10 Zipf mix
+DESCRIPTOR_BYTES = 256 * 1024
+
+
+def _base_qos() -> fabric.QosPolicy:
+    tuned = fabric.autotune.tuned_config("serving")
+    return tuned.qos() if tuned is not None else fabric.QosPolicy()
+
+
+def _cluster(qos, *, token_target_s, queue_limit, max_queue_wait_s):
+    return ServingCluster(
+        get_config("deepseek-7b"), None, torus=Torus(SMOKE_DIMS),
+        modelled=True, n_params=N_PARAMS, tp_axes=None, fidelity="fluid",
+        max_batch=4, max_seq=576, page_tokens=16, chunked_prefill=True,
+        qos=qos, descriptor_bytes=DESCRIPTOR_BYTES,
+        slo=SloPolicy(token_target_s=token_target_s,
+                      queue_limit=queue_limit,
+                      max_queue_wait_s=max_queue_wait_s))
+
+
+def _overload_trace(n_requests, seed):
+    rate = 0.5 * 16 / (T_TOK_S * MEAN_OUT_TOK)
+    return generate_trace(TraceConfig(
+        n_requests=n_requests, seed=seed, base_rate=rate,
+        diurnal_period_s=n_requests / (2 * rate),
+        burst_size=4.0, burst_rate=0.3,
+        prompt_min=256, prompt_max=448, max_context=512,
+        output_min=4, output_max=10))
+
+
+def _light_trace(n_requests, seed):
+    tokens_per_req = 50.8             # default Zipf mix (measured)
+    rate = 0.30 * 16 / (T_TOK_S * tokens_per_req)
+    return generate_trace(TraceConfig(
+        n_requests=n_requests, seed=seed, base_rate=rate,
+        diurnal_period_s=n_requests / (2 * rate)))
+
+
+def _background(cluster, t) -> None:
+    """Per-hook DECODE cross-traffic on every directed link: the state
+    the static weights were not tuned for.  The event-driven replay
+    otherwise serialises the fabric (a PUT runs the shared timeline to
+    completion), so this is what makes migrations actually contend."""
+    for r in range(cluster.torus.size):
+        for nb in cluster.torus.neighbors(r):
+            cluster.sim.inject(r, nb, CHUNK_BYTES,
+                               cls=fabric.TrafficClass.DECODE)
+
+
+def _closed_loop(base_qos, trace, *, controlled):
+    cl = _cluster(base_qos, token_target_s=0.020, queue_limit=24,
+                  max_queue_wait_s=0.5)
+    ctl = fabric.QosController(base_qos, cl.slo) if controlled else None
+    rep = replay(cl, trace, rebalance="proactive", qos_ctl=ctl,
+                 background=_background, rebalance_every_s=HOOK_S)
+    return rep, ctl
+
+
+# --- descriptor preemption probe ------------------------------------------
+_PAGE = 65536
+_NPAGES = 512                         # 32 MB BULK drain
+
+
+def _probe_endpoints(descriptor_bytes):
+    torus = Torus(SMOKE_DIMS)
+    net = NetModel()
+    sim = fabric.FabricSim(torus, net, qos=fabric.QosPolicy())
+    src = RdmaEndpoint(torus, rank=0, net=net, sim=sim,
+                       descriptor_bytes=descriptor_bytes)
+    dst = RdmaEndpoint(torus, rank=1, net=net, sim=sim)
+    reg, dreg = src.register(_NPAGES * _PAGE), dst.register(_NPAGES * _PAGE)
+    src.translate_region(reg)         # warm the TLB: pass 2 is hot
+    dst.translate_region(dreg)
+    return sim, src, dst, reg, dreg
+
+
+def _probe_wait(descriptor_bytes) -> float:
+    """DECODE wait at the source host interface when it arrives a
+    quarter of the way into a 32 MB BULK DMA drain."""
+    # pass 1 on a twin fabric: learn where mid-drain lands
+    sim, src, dst, reg, dreg = _probe_endpoints(descriptor_bytes)
+    t_hot = src.translate_region(reg)
+    src.put_pages(dst.rank, reg, list(range(_NPAGES)), page_nbytes=_PAGE,
+                  dst_endpoint=dst, dst_region=dreg,
+                  dst_pages=list(range(_NPAGES)))
+    t_mid = t_hot + 0.25 * src.last_put_report["dma_s"]
+    # pass 2: the timed probe
+    sim, src, dst, reg, dreg = _probe_endpoints(descriptor_bytes)
+    fin = sim.occupy(("hostif", 0), 50e-6, start_s=t_mid,
+                     cls=fabric.TrafficClass.DECODE, label="decode_probe")
+    src.put_pages(dst.rank, reg, list(range(_NPAGES)), page_nbytes=_PAGE,
+                  dst_endpoint=dst, dst_region=dreg,
+                  dst_pages=list(range(_NPAGES)))
+    return sim.finish_s(fin) - t_mid - 50e-6
+
+
+def _restriped_count() -> int:
+    """Mid-flight re-striping on a congested primary: siblings issued."""
+    sim, src, dst, reg, dreg = _probe_endpoints(None)
+    torus = Torus(SMOKE_DIMS)
+    plan = fabric.striped_routes(sim, 0, 1, _NPAGES * _PAGE, k=3)
+    stripes = []
+    for (route, _), c in zip(plan, fabric.stripe_counts(plan, _NPAGES)):
+        if c > 0:
+            stripes.append((fabric.lower_route(torus, route), c * _PAGE))
+    for i in range(8):                # hammer the direct 0->1 link
+        sim.inject(0, 1, 4e6, start_s=1e-3 + i * 1e-4,
+                   cls=fabric.TrafficClass.DECODE)
+    src.put_pages(dst.rank, reg, list(range(_NPAGES)), page_nbytes=_PAGE,
+                  dst_endpoint=dst, dst_region=dreg,
+                  dst_pages=list(range(_NPAGES)),
+                  stripes=stripes, restripe_s=4e-3)
+    return int(src.last_put_report["restriped"])
+
+
+def run() -> list[dict]:
+    fast = os.environ.get("QOSCTL_FAST", "0") == "1"
+    seed = int(os.environ.get("BENCH_SEED", "0"))
+    t0 = time.perf_counter()
+    rows: list[dict] = []
+
+    # --- closed loop vs static on the identical overload trace --------
+    base_qos = _base_qos()
+    tro = _overload_trace(64, SMOKE_SEED + seed)
+    sta, _ = _closed_loop(base_qos, tro, controlled=False)
+    dyn, ctl = _closed_loop(base_qos, tro, controlled=True)
+    rows += [
+        {"bench": "qosctl", "metric": "closed_loop_gain",
+         "value": sta.tpt_p99_s / dyn.tpt_p99_s,
+         "gate": "higher", "tol": 0.25,
+         "note": "static tpt p99 / closed-loop tpt p99 on the identical "
+                 f"overload trace (bar: >= {GAIN_BAR}x); static="
+                 f"{sta.tpt_p99_s * 1e3:.1f} ms, closed-loop="
+                 f"{dyn.tpt_p99_s * 1e3:.1f} ms"},
+        {"bench": "qosctl", "metric": "closed_loop_ttft_ratio",
+         "value": sta.ttft_p99_s / dyn.ttft_p99_s,
+         "gate": "higher", "tol": 0.10,
+         "note": "static ttft p99 / closed-loop ttft p99 (must be >= 1: "
+                 "the controller may not trade TTFT for tpt)"},
+        {"bench": "qosctl", "metric": "closed_loop_retunes",
+         "value": float(ctl.n_retunes),
+         "note": f"set_qos calls issued; {ctl.describe()}"},
+    ]
+
+    # --- informational: the same loop over the un-tuned defaults ------
+    if not fast:
+        dflt = fabric.QosPolicy()
+        dsta, _ = _closed_loop(dflt, tro, controlled=False)
+        ddyn, _ = _closed_loop(dflt, tro, controlled=True)
+        rows.append(
+            {"bench": "qosctl", "metric": "closed_loop_gain_default",
+             "value": dsta.tpt_p99_s / ddyn.tpt_p99_s,
+             "note": "same gain over DEFAULT_WEIGHTS instead of the "
+                     "autotuned baseline (informational)"})
+
+    # --- descriptor-granular preemption -------------------------------
+    w_mono = _probe_wait(None)
+    w_desc = _probe_wait(DESCRIPTOR_BYTES)
+    eps = 1e-6                        # 1 us floor: the descriptor path
+    #                                   can land exactly on a boundary
+    rows += [
+        {"bench": "qosctl", "metric": "preemption_latency",
+         "value": (w_mono + eps) / (w_desc + eps),
+         "gate": "higher", "tol": 0.25,
+         "note": "DECODE host-interface wait mid-drain of a 32 MB BULK "
+                 f"PUT, monolithic / {DESCRIPTOR_BYTES // 1024} KiB "
+                 f"descriptors (bar: >= {PREEMPT_BAR}x); mono="
+                 f"{w_mono * 1e3:.3f} ms, desc={w_desc * 1e3:.3f} ms"},
+        {"bench": "qosctl", "metric": "restriped_descriptors",
+         "value": float(_restriped_count()),
+         "note": "sibling descriptors issued when a striped 32 MB PUT "
+                 "re-splits its remainder across re-probed routes at a "
+                 "4 ms checkpoint (congested primary leg)"},
+    ]
+
+    # --- quiescence: controller attached, never fires ------------------
+    trl = _light_trace(32, SMOKE_SEED + seed)
+    qoff, _ = _quiescent(base_qos, trl, controlled=False)
+    qon, qctl = _quiescent(base_qos, trl, controlled=True)
+    m0, m1 = qoff.metrics(), qon.metrics()
+    rows += [
+        {"bench": "qosctl", "metric": "controller_quiescence_maxdiff",
+         "value": max(abs(m0[k] - m1[k]) for k in m0),
+         "note": "max |metric delta| of a no-overload replay with vs "
+                 "without the controller attached (must be exactly 0: "
+                 "the controller is latched quiescent)"},
+        {"bench": "qosctl", "metric": "quiescent_retunes",
+         "value": float(qctl.n_retunes),
+         "note": "set_qos calls on the no-overload trace (must be 0); "
+                 f"{qctl.describe()}"},
+    ]
+
+    rows.append(
+        {"bench": "qosctl", "metric": "qosctl_wall_ms",
+         "value": (time.perf_counter() - t0) * 1e3,
+         "note": f"whole module (budget {BUDGET_MS:.0f} ms)"})
+    return rows
+
+
+def _quiescent(base_qos, trace, *, controlled):
+    cl = _cluster(base_qos, token_target_s=0.066, queue_limit=256,
+                  max_queue_wait_s=1.0)
+    ctl = fabric.QosController(base_qos, cl.slo) if controlled else None
+    rep = replay(cl, trace, rebalance="proactive", qos_ctl=ctl,
+                 rebalance_every_s=HOOK_S)
+    return rep, ctl
+
+
+def check(rows) -> list[str]:
+    vals = {r["metric"]: r["value"] for r in rows}
+    errs = []
+    if vals["closed_loop_gain"] < GAIN_BAR:
+        errs.append(f"closed_loop_gain = {vals['closed_loop_gain']:.3f}x: "
+                    "the closed-loop controller must beat the static "
+                    f"autotuned weights by >= {GAIN_BAR}x on p99 "
+                    "per-token latency")
+    if vals["closed_loop_ttft_ratio"] < 1.0 - 1e-9:
+        errs.append(f"closed_loop_ttft_ratio = "
+                    f"{vals['closed_loop_ttft_ratio']:.4f}: the "
+                    "controller regressed p99 TTFT")
+    if vals["closed_loop_retunes"] < 1.0:
+        errs.append("the controller never retuned on the overload trace "
+                    "— the gain row is not measuring the closed loop")
+    if vals["preemption_latency"] < PREEMPT_BAR:
+        errs.append(f"preemption_latency = "
+                    f"{vals['preemption_latency']:.2f}x: descriptor-"
+                    "granular queues must cut the mid-drain DECODE wait "
+                    f"by >= {PREEMPT_BAR}x")
+    if vals["restriped_descriptors"] < 1.0:
+        errs.append("no sibling descriptors issued — mid-flight "
+                    "re-striping did not engage on the congested leg")
+    if vals["controller_quiescence_maxdiff"] != 0.0:
+        errs.append(f"quiescence broken: attaching an idle controller "
+                    f"changed replay metrics by "
+                    f"{vals['controller_quiescence_maxdiff']:.3g}")
+    if vals["quiescent_retunes"] != 0.0:
+        errs.append(f"{vals['quiescent_retunes']:.0f} retunes fired on "
+                    "the no-overload trace (must be 0)")
+    if vals["qosctl_wall_ms"] > BUDGET_MS:
+        errs.append(f"qosctl took {vals['qosctl_wall_ms']:.0f} ms, over "
+                    f"the {BUDGET_MS:.0f} ms budget")
+    return errs
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['bench']},{r['metric']},{r['value']}")

@@ -21,11 +21,21 @@ scale the partitioned multi-class credits form cyclic buffer waits that
 the escape-credit recovery (``FabricSim._unstick``) must resolve — the
 run must finish every flow (``packet_unfinished`` == 0).
 
+3. **``warm_retune_speedup``** (reported; ``warm_retune_maxdiff`` gated
+   at 0): a weights-only ``set_qos`` on a settled fluid sim warm-starts
+   the rate solver from the cached incidence arrays (the active set did
+   not change between solves, so only the class-weight vector differs).
+   A 24-step retune sweep — the closed-loop QoS controller / autotuner
+   candidate-evaluation shape — is timed with the cache enabled vs
+   forcibly cleared; the two arms must produce bitwise-identical flow
+   rates, and the warm arm must actually hit the cache
+   (``warm_retune_solves`` >= 1).
+
 ``SIMSCALE_FAST=1`` (the CI fast lane) skips the ~90 s packet baseline:
-the fluid 512-node run and the schedule differential still execute, and
-``check`` enforces an absolute wall budget on the fluid smoke.  The
-differential suite is identical in both lanes, so its gated metrics
-diff cleanly across fast/full snapshots.
+the fluid 512-node run, the schedule differential and the warm-start
+retune sweep still execute, and ``check`` enforces an absolute wall
+budget on the fluid smoke.  The differential suite is identical in both
+lanes, so its gated metrics diff cleanly across fast/full snapshots.
 """
 from __future__ import annotations
 
@@ -42,6 +52,13 @@ DIMS = (8, 8, 8)             # 512 nodes
 N_FLOWS = 2000
 SEED = 0
 FLUID_BUDGET_MS = 15000.0    # fast-lane wall budget for the fluid smoke
+
+# warm-start retune sweep: candidate weight settings evaluated back to
+# back on a settled sim (no events in between -> identical active set,
+# so every solve after the first reuses the cached incidence arrays)
+_RETUNE_STEPS = 24
+_RETUNE_REPS = 5
+_RETUNE_SPEEDUP_BAR = 1.05
 
 # random-schedule differential suite: small meshes where the packet
 # oracle is cheap, every collective kind, mixed sizes/classes/QoS
@@ -78,6 +95,52 @@ def _run_tier(fidelity: str, flows) -> tuple[float, object]:
         sim.inject(src, dst, nbytes, cls=cls, start_s=start)
     sim.run()
     return time.perf_counter() - t0, sim
+
+
+def _warm_retune(flows) -> tuple[float, float, float, int]:
+    """(warm_ms, cold_ms, maxdiff, warm_solves) for a weights-only
+    ``set_qos`` sweep on a settled mid-flight fluid sim — the shape the
+    closed-loop QoS controller and the autotuner drive (many candidate
+    weight vectors priced against one live fabric state).  The cold arm
+    clears the incidence cache before every solve; both arms run
+    interleaved on the same settled sim (no events fire between solves,
+    so every solve sees the identical active set) and the min over
+    ``_RETUNE_REPS`` repetitions de-noises the wall clocks."""
+    torus = Torus(DIMS)
+    fabric.clear_route_cache()
+    sim = make_sim(torus, fidelity="fluid", qos=QosPolicy())
+    for src, dst, nbytes, cls, start in flows:
+        sim.inject(src, dst, nbytes, cls=cls, start_s=start)
+    sim.run_until(5e-4)
+
+    def sweep(cold: bool) -> float:
+        t0 = time.perf_counter()
+        for k in range(_RETUNE_STEPS):
+            if cold:
+                sim._inc_cache = None
+            sim.set_qos(QosPolicy(
+                weights={TrafficClass.DECODE: 8.0 + 0.5 * k}))
+        return time.perf_counter() - t0
+
+    warm_t, cold_t = [], []
+    for _ in range(_RETUNE_REPS):
+        cold_t.append(sweep(cold=True))
+        warm_t.append(sweep(cold=False))
+
+    # bitwise differential: at every sweep step, a cold rebuild and a
+    # warm re-solve under identical weights must allocate identical
+    # per-flow rates (maxdiff == 0.0 exactly, not approximately)
+    maxdiff = 0.0
+    for k in range(_RETUNE_STEPS):
+        pol = QosPolicy(weights={TrafficClass.DECODE: 8.0 + 0.5 * k})
+        sim._inc_cache = None
+        sim.set_qos(pol)
+        ref = [f.rate for f in sim._active.values()]
+        sim.set_qos(pol)
+        got = [f.rate for f in sim._active.values()]
+        maxdiff = max([maxdiff] + [abs(a - b) for a, b in zip(ref, got)])
+    return (min(warm_t) * 1e3, min(cold_t) * 1e3, maxdiff,
+            sim.n_warm_solves)
 
 
 def _schedule_differential() -> tuple[float, float]:
@@ -148,6 +211,24 @@ def run() -> list[dict]:
              "note": "escape-credit recoveries during the packet run"},
         ]
 
+    warm_ms, cold_ms, maxdiff, nwarm = _warm_retune(flows)
+    rows += [
+        {"bench": "simscale", "metric": "warm_retune_speedup",
+         "value": cold_ms / warm_ms,
+         "note": f"cold/warm wall over a {_RETUNE_STEPS}-step weights-only "
+                 f"set_qos sweep (min of {_RETUNE_REPS} interleaved reps) "
+                 f"on the settled 512-node sim; warm {warm_ms:.1f} ms vs "
+                 f"cold {cold_ms:.1f} ms"},
+        {"bench": "simscale", "metric": "warm_retune_solves",
+         "value": float(nwarm),
+         "note": "solves that reused the cached incidence arrays "
+                 "(>= 1 required: the warm arm must actually hit)"},
+        {"bench": "simscale", "metric": "warm_retune_maxdiff",
+         "value": maxdiff, "gate": "lower",
+         "note": "max |warm - cold| per-flow rate at identical weights "
+                 "(bar: == 0.0 — warm start must be bitwise-equal)"},
+    ]
+
     err_f, err_h = _schedule_differential()
     rows += [
         {"bench": "simscale", "metric": "fluid_sched_maxerr",
@@ -180,6 +261,16 @@ def check(rows) -> list[str]:
         if vals[m] > 0.10:
             errs.append(f"{m} = {vals[m]:.3f} exceeds the 10% "
                         "fluid-vs-packet differential contract")
+    if vals["warm_retune_maxdiff"] != 0.0:
+        errs.append(f"warm-started retune diverged from the cold solve "
+                    f"(maxdiff = {vals['warm_retune_maxdiff']:.3e}, "
+                    "must be bitwise 0)")
+    if vals["warm_retune_solves"] < 1.0:
+        errs.append("the warm retune sweep never hit the incidence "
+                    "cache (warm_retune_solves == 0)")
+    if vals["warm_retune_speedup"] < _RETUNE_SPEEDUP_BAR:
+        errs.append(f"warm retune speedup {vals['warm_retune_speedup']:.2f}x "
+                    f"below the {_RETUNE_SPEEDUP_BAR:.2f}x bar")
     return errs
 
 

@@ -82,10 +82,13 @@ if [ "$LANE" = "fast" ]; then
     # autotune smoke caps the design-space search at 20 fluid steps
     # (seeded, genetic agent only) with the winner still packet-verified;
     # the trace-replay smoke (TRACE_FAST=1) runs the 16-node SLO replay
-    # and skips the 512-node nightly-scale one
+    # and skips the 512-node nightly-scale one; the closed-loop QoS
+    # smoke (QOSCTL_FAST=1) keeps all three gated rows (gain,
+    # preemption, quiescence) and skips the default-weights arm
     step "benches-quick" env SIMSCALE_FAST=1 AUTOTUNE_FAST=1 TRACE_FAST=1 \
+        QOSCTL_FAST=1 \
         python -m benchmarks.run overlap dma_overlap fabric_cost \
-        migration contention qos simscale autotune trace_replay
+        migration contention qos simscale autotune trace_replay qosctl
 else
     step "tests-full" python -m pytest -x -q
     if [ "$LANE" = "nightly" ]; then

@@ -29,7 +29,8 @@ links) behind the same duck-typed surface.
 """
 from repro.core.fabric.cost import (BACKENDS, CostEstimate, OverlapEstimate,
                                     algorithmic_bandwidth, estimate,
-                                    estimate_overlapped, message_time)
+                                    estimate_overlapped, hostif_descriptors,
+                                    message_time)
 from repro.core.fabric.fluid import (FIDELITIES, FluidSim, HybridSim,
                                      make_sim)
 from repro.core.fabric.execute import (execute, execute_all_gather,
@@ -50,6 +51,7 @@ from repro.core.fabric.schedule import (A2A, AG, AR, HALO, P2P, RS, Bucket,
                                         FaultMap, Phase, Step, Transfer)
 from repro.core.fabric.qos import (DEFAULT_CREDIT_FRAC, DEFAULT_WEIGHTS,
                                    SINGLE_CLASS, QosPolicy, TrafficClass)
+from repro.core.fabric.qosctl import QosController, QosCtlPolicy
 from repro.core.fabric.sim import (FabricSim, FlowResult, best_route,
                                    candidate_routes, clear_route_cache,
                                    inject_schedule, simulate_schedule,
@@ -71,7 +73,7 @@ __all__ = [
     "Bucket", "BucketPlan", "CollectiveSchedule", "FaultMap", "Phase",
     "Step", "Transfer",
     "BACKENDS", "CostEstimate", "OverlapEstimate", "algorithmic_bandwidth",
-    "estimate", "estimate_overlapped", "message_time",
+    "estimate", "estimate_overlapped", "hostif_descriptors", "message_time",
     "execute", "execute_all_gather", "execute_all_reduce",
     "execute_all_to_all", "execute_halo_exchange", "execute_reduce_scatter",
     "make_bucket_grad_hook", "ring_slot",
@@ -84,7 +86,7 @@ __all__ = [
     "stripe_counts", "striped_routes",
     "FIDELITIES", "FluidSim", "HybridSim", "make_sim",
     "DEFAULT_CREDIT_FRAC", "DEFAULT_WEIGHTS", "SINGLE_CLASS", "QosPolicy",
-    "TrafficClass",
+    "QosController", "QosCtlPolicy", "TrafficClass",
     "AGENTS", "ConfigSpace", "FabricConfig", "FabricEnv", "GeneticAgent",
     "GpBoAgent", "RandomWalkAgent", "ReplaySpec", "ScoreReport",
     "SearchResult", "finalists", "load_best_configs", "rescore",

@@ -93,7 +93,11 @@ class FabricConfig:
     ``qos_weights`` / ``qos_credit_frac`` are in ``TrafficClass`` order
     (CONTROL, DECODE, COLLECTIVE, BULK); ``qos_single=True`` collapses
     them onto the legacy single-FIFO link (the pre-QoS default the
-    search must beat)."""
+    search must beat).  ``ctl_gain`` / ``ctl_decay`` / ``ctl_floor`` are
+    the closed-loop controller's step sizes and relief floor
+    (``fabric.QosCtlPolicy`` — the static weights above are its
+    *baseline*, these knobs shape how far and how fast it departs from
+    them)."""
 
     torus_dims: tuple[int, ...]
     qos_single: bool = True
@@ -102,6 +106,9 @@ class FabricConfig:
     bucket_mb: float = 4.0
     stripe_k: int = 1
     route_policy: str = "hops"
+    ctl_gain: float = 1.6
+    ctl_decay: float = 0.6
+    ctl_floor: float = 0.25
 
     def qos(self) -> QosPolicy:
         """The ``QosPolicy`` this config lowers to."""
@@ -120,6 +127,8 @@ class FabricConfig:
 
     @classmethod
     def from_jsonable(cls, d: Mapping) -> "FabricConfig":
+        # controller knobs arrived a PR later than the rest: artifacts
+        # pinned before them load with the defaults, not a KeyError
         return cls(torus_dims=tuple(int(x) for x in d["torus_dims"]),
                    qos_single=bool(d["qos_single"]),
                    qos_weights=tuple(float(x) for x in d["qos_weights"]),
@@ -127,7 +136,10 @@ class FabricConfig:
                                          for x in d["qos_credit_frac"]),
                    bucket_mb=float(d["bucket_mb"]),
                    stripe_k=int(d["stripe_k"]),
-                   route_policy=str(d["route_policy"]))
+                   route_policy=str(d["route_policy"]),
+                   ctl_gain=float(d.get("ctl_gain", 1.6)),
+                   ctl_decay=float(d.get("ctl_decay", 0.6)),
+                   ctl_floor=float(d.get("ctl_floor", 0.25)))
 
 
 class ConfigSpace:
@@ -140,11 +152,14 @@ class ConfigSpace:
                  bucket_range_mb: tuple[float, float] = (1.0, 256.0),
                  weight_range: tuple[float, float] = (1.0, 32.0),
                  min_credit_frac: float = 0.05,
-                 stripe_max: int = 4) -> None:
+                 stripe_max: int = 4,
+                 ctl_gain_range: tuple[float, float] = (1.1, 3.0)) -> None:
         if bucket_range_mb[0] <= 0 or bucket_range_mb[0] > bucket_range_mb[1]:
             raise ValueError(f"bad bucket range {bucket_range_mb}")
         if stripe_max < 1:
             raise ValueError(f"stripe_max must be >= 1, got {stripe_max}")
+        if not 1.0 < ctl_gain_range[0] <= ctl_gain_range[1]:
+            raise ValueError(f"bad ctl_gain range {ctl_gain_range}")
         self.n_nodes = n_nodes
         self.shapes = torus_shapes(n_nodes)
         self.bucket_range_mb = (float(bucket_range_mb[0]),
@@ -152,6 +167,8 @@ class ConfigSpace:
         self.weight_range = (float(weight_range[0]), float(weight_range[1]))
         self.min_credit_frac = float(min_credit_frac)
         self.stripe_max = int(stripe_max)
+        self.ctl_gain_range = (float(ctl_gain_range[0]),
+                               float(ctl_gain_range[1]))
 
     # -- canonical points -----------------------------------------------------
     def default(self) -> FabricConfig:
@@ -183,6 +200,7 @@ class ConfigSpace:
     def sample(self, rng: random.Random) -> FabricConfig:
         lo, hi = self.weight_range
         blo, bhi = self.bucket_range_mb
+        glo, ghi = self.ctl_gain_range
         fracs = self._norm_fracs([rng.random() + self.min_credit_frac
                                   for _ in _CLASSES])
         return FabricConfig(
@@ -195,7 +213,10 @@ class ConfigSpace:
             bucket_mb=round(float(np.exp(rng.uniform(np.log(blo),
                                                      np.log(bhi)))), 4),
             stripe_k=rng.randint(1, self.stripe_max),
-            route_policy=rng.choice(ROUTE_POLICIES))
+            route_policy=rng.choice(ROUTE_POLICIES),
+            ctl_gain=round(rng.uniform(glo, ghi), 4),
+            ctl_decay=round(rng.uniform(0.3, 0.9), 4),
+            ctl_floor=round(rng.uniform(0.1, 0.8), 4))
 
     def mutate(self, cfg: FabricConfig, rng: random.Random,
                scale: float = 0.5) -> FabricConfig:
@@ -204,7 +225,8 @@ class ConfigSpace:
         self.validate(cfg)
         d = cfg.to_jsonable()
         knobs = ["torus_dims", "qos_single", "qos_weights",
-                 "qos_credit_frac", "bucket_mb", "stripe_k", "route_policy"]
+                 "qos_credit_frac", "bucket_mb", "stripe_k", "route_policy",
+                 "ctl"]
         for knob in rng.sample(knobs, k=rng.randint(1, 2)):
             if knob == "torus_dims":
                 d[knob] = list(rng.choice(self.shapes))
@@ -226,6 +248,15 @@ class ConfigSpace:
             elif knob == "stripe_k":
                 d[knob] = self._clip(d[knob] + rng.choice((-1, 1)),
                                      1, self.stripe_max)
+            elif knob == "ctl":
+                g = d["ctl_gain"] * float(np.exp(rng.gauss(0.0, scale)))
+                d["ctl_gain"] = round(self._clip(g, *self.ctl_gain_range), 4)
+                d["ctl_decay"] = round(self._clip(
+                    d["ctl_decay"] * float(np.exp(rng.gauss(0.0, scale))),
+                    0.3, 0.9), 4)
+                d["ctl_floor"] = round(self._clip(
+                    d["ctl_floor"] * float(np.exp(rng.gauss(0.0, scale))),
+                    0.1, 0.8), 4)
             else:
                 d[knob] = rng.choice(ROUTE_POLICIES)
         return FabricConfig.from_jsonable(d)
@@ -242,6 +273,12 @@ class ConfigSpace:
             child[k] = qos_src[k]
         for k in ("torus_dims", "bucket_mb", "stripe_k", "route_policy"):
             child[k] = (da if rng.random() < 0.5 else db)[k]
+        # the controller's three knobs travel together (gain/decay/floor
+        # form one damping profile — mixing parents' halves of it breaks
+        # the stability the search scored)
+        ctl_src = da if rng.random() < 0.5 else db
+        for k in ("ctl_gain", "ctl_decay", "ctl_floor"):
+            child[k] = ctl_src[k]
         return FabricConfig.from_jsonable(child)
 
     # -- encoding (GP features / env observation) -----------------------------
@@ -261,11 +298,15 @@ class ConfigSpace:
         feats.append((cfg.stripe_k - 1) / max(self.stripe_max - 1, 1))
         feats.append(ROUTE_POLICIES.index(cfg.route_policy)
                      / (len(ROUTE_POLICIES) - 1))
+        glo, ghi = self.ctl_gain_range
+        feats.append((cfg.ctl_gain - glo) / max(ghi - glo, 1e-12))
+        feats.append((cfg.ctl_decay - 0.3) / 0.6)
+        feats.append((cfg.ctl_floor - 0.1) / 0.7)
         return np.asarray(feats, dtype=np.float64)
 
     @property
     def encoded_dim(self) -> int:
-        return 5 + 2 * len(_CLASSES)
+        return 8 + 2 * len(_CLASSES)
 
     # -- validation -----------------------------------------------------------
     def validate(self, cfg: FabricConfig) -> None:
@@ -294,6 +335,16 @@ class ConfigSpace:
         if cfg.route_policy not in ROUTE_POLICIES:
             raise ValueError(f"unknown route_policy {cfg.route_policy!r}; "
                              f"expected one of {ROUTE_POLICIES}")
+        if not self.ctl_gain_range[0] <= cfg.ctl_gain \
+                <= self.ctl_gain_range[1]:
+            raise ValueError(f"ctl_gain {cfg.ctl_gain} outside "
+                             f"{self.ctl_gain_range}")
+        if not 0.0 < cfg.ctl_decay < 1.0:
+            raise ValueError(
+                f"ctl_decay must be in (0, 1), got {cfg.ctl_decay}")
+        if not 0.0 < cfg.ctl_floor <= 1.0:
+            raise ValueError(
+                f"ctl_floor must be in (0, 1], got {cfg.ctl_floor}")
 
     def _norm_fracs(self, fracs: Sequence[float]) -> tuple[float, ...]:
         f = np.clip(np.asarray(fracs, dtype=float), self.min_credit_frac,

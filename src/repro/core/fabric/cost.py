@@ -46,6 +46,28 @@ def message_time(nbytes: int, net: NetModel | None = None, *,
     return net.latency(max(int(nbytes), 0), hops=hops, **endpoint_kw)
 
 
+def hostif_descriptors(nbytes: float,
+                       descriptor_bytes: float) -> list[float]:
+    """Byte sizes of the §2.1 prefetchable command-queue descriptors one
+    host-IF DMA drain of ``nbytes`` splits into: full ``descriptor_bytes``
+    chunks plus the partial tail, in issue order (sums to ``nbytes``
+    exactly).  This is the preemption granularity of the host interface —
+    a bulk drain occupies the host-IF FIFO one descriptor at a time, so a
+    queued higher-class descriptor overtakes the *remaining* bulk
+    descriptors instead of waiting out the whole PUT.  Shared by
+    ``RdmaEndpoint.put_pages`` and the QoS controller benchmarks so both
+    price the same split."""
+    if descriptor_bytes <= 0:
+        raise ValueError(
+            f"descriptor_bytes must be > 0, got {descriptor_bytes}")
+    if nbytes <= 0:
+        return [max(nbytes, 0.0)]
+    n = int(-(-nbytes // descriptor_bytes))
+    out = [float(descriptor_bytes)] * (n - 1)
+    out.append(float(nbytes) - (n - 1) * float(descriptor_bytes))
+    return out
+
+
 BACKENDS = ("analytic", "sim")
 FIDELITIES = ("packet", "fluid", "hybrid")
 

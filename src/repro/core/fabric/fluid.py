@@ -101,9 +101,9 @@ class _FFlow:
     endpoint terms (packet-model parity, see module docstring)."""
 
     __slots__ = ("fid", "route", "links", "link_keys", "nbytes", "remaining",
-                 "rate", "weight", "tail_s", "cls", "cidx", "req_start",
-                 "start_s", "drain_s", "finish_s", "pending", "deps",
-                 "dependents", "src_over", "dst_over", "rate_cap",
+                 "rate", "weight", "tail_s", "tail_bytes", "cls", "cidx",
+                 "req_start", "start_s", "drain_s", "finish_s", "pending",
+                 "deps", "dependents", "src_over", "dst_over", "rate_cap",
                  "resource", "service_s", "label", "channel", "src_gpu",
                  "dst_gpu", "version")
 
@@ -117,6 +117,7 @@ class _FFlow:
         self.rate = 0.0           # current allocated rate, bytes/s
         self.weight = 1.0         # within-class arbiter weight (pkt bytes)
         self.tail_s = 0.0         # store-and-forward tail + hop latency
+        self.tail_bytes = 0.0     # last-packet bytes riding the tail
         self.cls: TrafficClass | None = None
         self.cidx = 0
         self.req_start = 0.0
@@ -201,6 +202,14 @@ class FluidSim:
         self._res_free: dict = {} # resource key -> FIFO free-at time
         self._probing = False
         self.n_solves = 0         # solver invocations (reporting)
+        self.n_warm_solves = 0    # solves that reused cached incidence
+        # warm-start cache: the flat incidence arrays ``_rates_np`` builds
+        # are a pure function of (active flow set, interned link count) —
+        # a re-solve where only the QoS weights changed (the controller's
+        # per-window retune) reuses them verbatim, so the waterfill rounds
+        # re-run against identical inputs and the allocation is bitwise
+        # equal to a cold solve at a fraction of the Python cost
+        self._inc_cache: tuple | None = None
         # hybrid escalation hooks (populated by the solver when tracking)
         self.escalate_util: float | None = None
         self._hot: set[int] = set()
@@ -296,6 +305,7 @@ class FluidSim:
         # sim's finish exactly: t0 + src_over + nbytes/B
         #                       + (h-1)*tail/B + h*t_hop + dst_over
         f.remaining = max(f.nbytes - tail, 0.0)
+        f.tail_bytes = tail
         f.tail_s = h * tail / self.link_bw + h * self.net.t_hop
         f.weight = pkt if pkt > 0 else 1.0
         f.src_over = self.net.t_inject \
@@ -448,15 +458,22 @@ class FluidSim:
         nc = self.qos.n_classes
         n_lids = len(self._lid_keys)
         n_flows = len(act)
-        hop_flow = np.repeat(np.arange(n_flows, dtype=np.int64),
-                             [len(f.links) for f in act])
-        hop_link = np.concatenate([f.links for f in act])
-        cidx = np.fromiter((f.cidx for f in act), dtype=np.int64,
-                           count=n_flows)
-        wf = np.fromiter((f.weight for f in act), dtype=np.float64,
-                         count=n_flows)
-        cap = np.fromiter((f.rate_cap for f in act), dtype=np.float64,
-                          count=n_flows)
+        ckey = (n_lids, tuple(f.fid for f in act))
+        cached = self._inc_cache
+        if cached is not None and cached[0] == ckey:
+            hop_flow, hop_link, cidx, wf, cap = cached[1]
+            self.n_warm_solves += 1
+        else:
+            hop_flow = np.repeat(np.arange(n_flows, dtype=np.int64),
+                                 [len(f.links) for f in act])
+            hop_link = np.concatenate([f.links for f in act])
+            cidx = np.fromiter((f.cidx for f in act), dtype=np.int64,
+                               count=n_flows)
+            wf = np.fromiter((f.weight for f in act), dtype=np.float64,
+                             count=n_flows)
+            cap = np.fromiter((f.rate_cap for f in act), dtype=np.float64,
+                              count=n_flows)
+            self._inc_cache = (ckey, (hop_flow, hop_link, cidx, wf, cap))
         wc = np.asarray(self._weights, dtype=np.float64)
         resid = np.full(n_lids, B)
         rate = np.zeros(n_flows)
@@ -541,30 +558,49 @@ class FluidSim:
         """Process every pending event; returns the frontier time."""
         heap = self._heap
         while heap:
-            t, _, kind, arg = heapq.heappop(heap)
-            if t < self._solve_t:
-                t = self._solve_t     # clock guard (coalesced batches)
-            self._frontier = max(self._frontier, t)
-            if kind == "start":
-                self._activate(self._flows[arg], t)
-            elif kind == "go":
-                f = self._flows[arg]
-                if f.finish_s is None and f.drain_s is None:
-                    self._go(f, t)
-            elif kind == "drain":
-                fid, ver = arg
-                f = self._flows.get(fid)
-                if f is not None and f.version == ver \
-                        and f.drain_s is None:
-                    self._drain(f, t)
-            elif kind == "complete":
-                f = self._flows.get(arg)
-                if f is not None and f.finish_s is None:
-                    self._finish(f, t)
-            if self._dirty and (not heap
-                                or heap[0][0] > t + self.coalesce_s):
-                self._solve(t)
+            self._step(heapq.heappop(heap))
         return self._frontier
+
+    def run_until(self, until: float) -> float:
+        """Process every event up to and including ``until``, settle the
+        active drain integrals to that instant, and stop with later
+        events pending — the mid-flight re-striping checkpoint.  A later
+        ``run()`` resumes in the same heap order; on the hybrid tier a
+        partial drain never escalates (escalation is a full-``run``
+        stitch)."""
+        heap = self._heap
+        while heap and heap[0][0] <= until:
+            self._step(heapq.heappop(heap))
+        if self._dirty and self._active:
+            self._solve(max(self._frontier, self._solve_t))
+        self._settle(max(self._frontier, until, self._solve_t))
+        self._frontier = max(self._frontier, until)
+        return self._frontier
+
+    def _step(self, ev: tuple) -> None:
+        t, _, kind, arg = ev
+        if t < self._solve_t:
+            t = self._solve_t     # clock guard (coalesced batches)
+        self._frontier = max(self._frontier, t)
+        if kind == "start":
+            self._activate(self._flows[arg], t)
+        elif kind == "go":
+            f = self._flows[arg]
+            if f.finish_s is None and f.drain_s is None:
+                self._go(f, t)
+        elif kind == "drain":
+            fid, ver = arg
+            f = self._flows.get(fid)
+            if f is not None and f.version == ver \
+                    and f.drain_s is None:
+                self._drain(f, t)
+        elif kind == "complete":
+            f = self._flows.get(arg)
+            if f is not None and f.finish_s is None:
+                self._finish(f, t)
+        if self._dirty and (not self._heap
+                            or self._heap[0][0] > t + self.coalesce_s):
+            self._solve(t)
 
     # -- results --------------------------------------------------------------
     def finish_s(self, fid: int) -> float:
@@ -593,15 +629,117 @@ class FluidSim:
                     "class_bytes": tuple(v[2])}
                 for k, v in self._stats.items()}
 
-    def class_stats(self) -> dict[TrafficClass, float]:
+    def class_stats(self, since: dict | None = None
+                    ) -> dict[TrafficClass, float]:
         """Bytes carried per traffic-class tag over every directed link
         (each wire hop counts) — identical accounting to the packet tier,
-        so per-class byte conservation is exact across fidelities."""
+        so per-class byte conservation is exact across fidelities.
+        ``since`` takes a previous ``class_stats()`` mapping and returns
+        the per-window DELTA (see ``FabricSim.class_stats``); the read
+        never mutates the sim."""
         totals = [0.0] * len(TrafficClass)
         for st in self._stats.values():
             for c in range(len(TrafficClass)):
                 totals[c] += st[2][c]
-        return {cls: totals[int(cls)] for cls in TrafficClass}
+        out = {cls: totals[int(cls)] for cls in TrafficClass}
+        if since is not None:
+            for cls in out:
+                out[cls] -= float(since.get(cls, 0.0))
+        return out
+
+    # -- live QoS retune -------------------------------------------------------
+    def set_qos(self, policy: QosPolicy) -> None:
+        """Swap the arbitration policy on a LIVE timeline — the fluid
+        expression of ``FabricSim.set_qos``.  The waterfill honors the
+        retuned weights from this instant on: active drain integrals are
+        settled under the old rates up to now, then one immediate re-solve
+        re-allocates every link under the new weights (warm-started — the
+        active set did not change, so the cached incidence arrays are
+        reused and only the class-weight vector differs)."""
+        if self._probing:
+            raise RuntimeError("set_qos during an active probe")
+        if policy.n_classes != self.qos.n_classes:
+            raise ValueError(
+                "cannot change the virtual-channel count of a live sim "
+                f"({self.qos.n_classes} -> {policy.n_classes})")
+        self.qos = policy
+        self._weights = policy.weight_vector()
+        self._class_credits = policy.partition_credits(self.credit_bytes)
+        if self._active:
+            self._solve(max(self._frontier, self._solve_t))
+
+    # -- mid-flight re-striping ------------------------------------------------
+    def unsent_bytes(self, fid: int) -> float:
+        """Drain bytes of ``fid`` not yet injected into the wire at the
+        last settle point (``run_until`` settles to its checkpoint) — the
+        remainder a mid-flight re-stripe may re-split.  The fluid tier
+        tracks a continuous drain integral, so "unsent" is the remaining
+        integral rather than a packet count; the store-and-forward tail
+        stays with the original flow."""
+        f = self._flows[fid]
+        if f.finish_s is not None or f.drain_s is not None \
+                or f.resource is not None:
+            return 0.0
+        if f.start_s is None:
+            return f.nbytes
+        return max(f.remaining, 0.0)
+
+    def restripe(self, fid: int, plan: Sequence[tuple]) -> list[int]:
+        """Re-split flow ``fid``'s unsent remainder across a fresh
+        ``striped_routes`` plan — ``FabricSim.restripe`` at flow level.
+        The flow is re-pointed at ``plan[0]`` carrying that route's share
+        (its byte/busy stats account on the final route — the fluid
+        fidelity contract trades per-hop exactness for O(flows) cost);
+        sibling flows carry the other shares from now.  Triggers an
+        immediate re-solve so no drain integral ever advances under a
+        stale route."""
+        if self._probing:
+            raise RuntimeError("restripe during an active probe")
+        f = self._flows[fid]
+        if f.resource is not None:
+            raise ValueError("cannot restripe a resource occupancy")
+        if f.start_s is None:
+            raise ValueError(f"flow {fid} has not started; nothing is "
+                             "committed yet — re-plan the whole transfer")
+        rem = self.unsent_bytes(fid)
+        routes: list[tuple[int, ...]] = []
+        fracs: list[float] = []
+        for route, frac in plan:
+            route = tuple(route)
+            if route[0] != f.route[0] or route[-1] != f.route[-1]:
+                raise ValueError(f"plan route {route} does not join "
+                                 f"{f.route[0]}->{f.route[-1]}")
+            if frac > 0.0:
+                routes.append(route)
+                fracs.append(float(frac))
+        if rem <= _BYTE_EPS or not routes:
+            return [fid]
+        total = sum(fracs)
+        shares = [rem * fr / total for fr in fracs]
+        taken = rem - shares[0]
+        f.nbytes = max(f.nbytes - taken, 0.0)
+        f.remaining = shares[0]
+        f.route = routes[0]
+        h = len(f.route) - 1
+        f.tail_s = h * f.tail_bytes / self.link_bw + h * self.net.t_hop
+        keys = tuple(
+            link_key(self.torus, f.route[i], f.route[i + 1], f.channel)
+            for i in range(h))
+        f.link_keys = keys
+        f.links = np.fromiter((self._lid_of(k) for k in keys),
+                              dtype=np.int64, count=h)
+        self._inc_cache = None     # the flow's incidence row changed
+        out = [fid]
+        for route, share in zip(routes[1:], shares[1:]):
+            out.append(self.inject(
+                route[0], route[-1], share, start_s=self._frontier,
+                route=route, src_gpu=f.src_gpu, dst_gpu=f.dst_gpu,
+                channel=f.channel, cls=f.cls,
+                label=(f.label + "+restripe") if f.label else "restripe"))
+        if f.fid in self._active:
+            self._dirty = True
+            self._solve(max(self._frontier, self._solve_t))
+        return out
 
     def prune(self) -> int:
         """Drop finished flows from the registry; returns how many."""
@@ -663,6 +801,9 @@ class FluidSim:
         self._seq_n = seq_n
         self._fid_n = fid_n
         self._hot = hot
+        # flow ids may be reused after the rollback with different routes;
+        # a stale incidence cache keyed on those ids would be wrong
+        self._inc_cache = None
 
     def probe_route(self, route: Sequence[int], nbytes: float, *,
                     start_s: float | None = None, **kw) -> float:

@@ -185,15 +185,23 @@ class _Link:
 
 
 class _Pkt:
-    __slots__ = ("fid", "idx", "hop", "nbytes", "prev")
+    __slots__ = ("fid", "idx", "hop", "nbytes", "prev", "route")
 
     def __init__(self, fid: int, idx: int, hop: int, nbytes: float,
-                 prev: tuple | None) -> None:
+                 prev: tuple | None,
+                 route: tuple[int, ...] = ()) -> None:
         self.fid = fid
         self.idx = idx           # packet index within the flow
         self.hop = hop           # index of the link being traversed
         self.nbytes = nbytes
         self.prev = prev         # upstream link key owed a credit return
+        # per-packet route tag: the flow's route at FEED time.  In-flight
+        # packets keep walking the path they were launched on even after
+        # ``restripe`` re-points the flow, so a half-sent striped PUT can
+        # re-split its unsent remainder without corrupting the packets
+        # already committed to the old path (§2.1's per-packet header
+        # routing, as opposed to per-flow circuit state).
+        self.route = route
 
 
 class _Flow:
@@ -589,9 +597,9 @@ class FabricSim:
         last = flow.npkts - 1
         nbytes = (flow.nbytes - last * flow.pkt_bytes) if idx == last \
             else flow.pkt_bytes
-        pkt = _Pkt(flow.fid, idx, 0, max(nbytes, 0.0), None)
+        pkt = _Pkt(flow.fid, idx, 0, max(nbytes, 0.0), None, flow.route)
         ready = (flow.start_s or 0.0) + flow.src_over + idx * flow.pace_s
-        key = self._link_key(flow.route[0], flow.route[1], flow.channel)
+        key = self._link_key(pkt.route[0], pkt.route[1], flow.channel)
         if ready > now:
             self._push(ready, "enqueue", (key, pkt))
         else:
@@ -628,47 +636,65 @@ class FabricSim:
             if not self._unstick():
                 return self._frontier
 
+    def run_until(self, t: float) -> float:
+        """Process every event up to and including time ``t``, then stop
+        with later events still pending — the checkpoint a mid-flight
+        re-striping PUT uses to inspect its unsent remainder.  A later
+        ``run()``/``run_until`` picks up exactly where this left off, in
+        the same heap order a straight ``run()`` would have used; credit-
+        deadlock recovery (``_unstick``) only engages on a full ``run``,
+        so a partial drain is always conservative."""
+        while self._heap and self._heap[0][0] <= t:
+            et, _, kind, arg = heapq.heappop(self._heap)
+            self._frontier = max(self._frontier, et)
+            self._dispatch(et, kind, arg)
+        self._frontier = max(self._frontier, t)
+        return self._frontier
+
     def _drain(self) -> None:
         while self._heap:
             t, _, kind, arg = heapq.heappop(self._heap)
             self._frontier = max(self._frontier, t)
-            if kind == "start":
-                self._start_flow(self._flows[arg], t)
-            elif kind == "retry":
-                link = self._link(arg)
-                if link.retry_at is not None and link.retry_at <= t:
-                    link.retry_at = None
-                else:
-                    # a superseded ghost drained out of the heap on its own
-                    self._stale = max(0, self._stale - 1)
-                self._try_start(arg, t)
-            elif kind == "enqueue":
-                key, pkt = arg
-                self._enqueue(key, pkt, t)
-            elif kind == "done":
-                self._finish_flow(self._flows[arg.fid], t)
-            elif kind == "arrive":
-                pkt: _Pkt = arg
-                flow = self._flows[pkt.fid]
-                here = pkt.hop + 1
-                up_key = self._link_key(flow.route[pkt.hop],
-                                        flow.route[here], flow.channel)
-                if here == len(flow.route) - 1:
-                    # consumed at the endpoint: buffer drains immediately
-                    up = self._link(up_key)
-                    up.credits[flow.cidx] += pkt.nbytes
-                    self._try_start(up_key, t)
-                    self._j_flow(flow)
-                    flow.arrived += 1
-                    if flow.arrived == flow.npkts:
-                        self._finish_flow(flow, t + flow.dst_over)
-                else:
-                    nxt = self._link_key(flow.route[here],
-                                         flow.route[here + 1], flow.channel)
-                    self._j_pkt(pkt)
-                    pkt.hop = here
-                    pkt.prev = up_key
-                    self._enqueue(nxt, pkt, t)
+            self._dispatch(t, kind, arg)
+
+    def _dispatch(self, t: float, kind: str, arg) -> None:
+        if kind == "start":
+            self._start_flow(self._flows[arg], t)
+        elif kind == "retry":
+            link = self._link(arg)
+            if link.retry_at is not None and link.retry_at <= t:
+                link.retry_at = None
+            else:
+                # a superseded ghost drained out of the heap on its own
+                self._stale = max(0, self._stale - 1)
+            self._try_start(arg, t)
+        elif kind == "enqueue":
+            key, pkt = arg
+            self._enqueue(key, pkt, t)
+        elif kind == "done":
+            self._finish_flow(self._flows[arg.fid], t)
+        elif kind == "arrive":
+            pkt: _Pkt = arg
+            flow = self._flows[pkt.fid]
+            here = pkt.hop + 1
+            up_key = self._link_key(pkt.route[pkt.hop],
+                                    pkt.route[here], flow.channel)
+            if here == len(pkt.route) - 1:
+                # consumed at the endpoint: buffer drains immediately
+                up = self._link(up_key)
+                up.credits[flow.cidx] += pkt.nbytes
+                self._try_start(up_key, t)
+                self._j_flow(flow)
+                flow.arrived += 1
+                if flow.arrived == flow.npkts:
+                    self._finish_flow(flow, t + flow.dst_over)
+            else:
+                nxt = self._link_key(pkt.route[here],
+                                     pkt.route[here + 1], flow.channel)
+                self._j_pkt(pkt)
+                pkt.hop = here
+                pkt.prev = up_key
+                self._enqueue(nxt, pkt, t)
 
     def _unstick(self) -> bool:
         """Credit-deadlock recovery (escape credit); True if it made
@@ -739,16 +765,127 @@ class FabricSim:
                     "class_bytes": tuple(v.class_bytes)}
                 for k, v in self._links.items()}
 
-    def class_stats(self) -> dict[TrafficClass, float]:
+    def class_stats(self, since: dict | None = None
+                    ) -> dict[TrafficClass, float]:
         """Bytes carried per traffic-class tag, summed over every directed
         link (each wire hop counts — a 3-hop flow carries 3x its payload).
         Accounting is by the flow's ``cls`` tag, so the breakdown is
-        meaningful even under ``single_class`` arbitration."""
+        meaningful even under ``single_class`` arbitration.
+
+        ``since`` takes a previous ``class_stats()`` mapping and returns
+        the per-class DELTA — the bytes carried inside one replay window,
+        which is what the closed-loop QoS controller steers on (run-
+        lifetime averages wash out exactly the transient it must react
+        to).  Reading stats never mutates the sim, so two identical
+        windows report identical deltas."""
         totals = [0.0] * len(TrafficClass)
         for link in self._links.values():
             for c in range(len(TrafficClass)):
                 totals[c] += link.class_bytes[c]
-        return {cls: totals[int(cls)] for cls in TrafficClass}
+        out = {cls: totals[int(cls)] for cls in TrafficClass}
+        if since is not None:
+            for cls in out:
+                out[cls] -= float(since.get(cls, 0.0))
+        return out
+
+    # -- live QoS retune -------------------------------------------------------
+    def set_qos(self, policy: QosPolicy) -> None:
+        """Swap the arbitration policy on a LIVE timeline — the closed-loop
+        controller's actuator.  Weights take effect at the next arbitration
+        decision (the arbiter reads them per service); credit partitions are
+        re-applied as a per-class DELTA to every existing link's balance, so
+        outstanding in-flight debits (and any escape-credit loans) stay
+        consistent: a link that owes 12 KB of BULK credit still owes it
+        after the retune, it just owes it against the new partition."""
+        if self._journal is not None:
+            raise RuntimeError("set_qos under an active probe journal")
+        if policy.n_classes != self.qos.n_classes:
+            raise ValueError(
+                "cannot change the virtual-channel count of a live sim "
+                f"({self.qos.n_classes} -> {policy.n_classes})")
+        old = self._class_credits
+        new = policy.partition_credits(self.credit_bytes)
+        self.qos = policy
+        self._weights = policy.weight_vector()
+        self._class_credits = new
+        for key, link in self._links.items():
+            for c in range(len(new)):
+                if new[c] != old[c]:
+                    link.credits[c] += new[c] - old[c]
+        # a credit raise may unblock queued heads immediately
+        for key, link in self._links.items():
+            if any(link.queues):
+                self._try_start(key, self._frontier)
+
+    # -- mid-flight re-striping ------------------------------------------------
+    def unsent_bytes(self, fid: int) -> float:
+        """Bytes of ``fid`` not yet committed to a route — the remainder a
+        mid-flight re-stripe may re-split.  Packets already FED to the
+        first link (queued or in flight) are committed: their per-packet
+        route tags pin them to the path they launched on."""
+        f = self._flows[fid]
+        if f.finish_s is not None or f.resource is not None:
+            return 0.0
+        if f.start_s is None:
+            return f.nbytes
+        return max(f.nbytes - f.sent * f.pkt_bytes, 0.0)
+
+    def restripe(self, fid: int, plan: Sequence[tuple]) -> list[int]:
+        """Re-split flow ``fid``'s unsent remainder across a fresh
+        ``striped_routes``-style plan ``[(route, frac), ...]`` — the
+        mid-flight re-striping a half-sent bulk PUT performs when probed
+        congestion has shifted since its original stripe plan.
+
+        The flow itself is re-pointed at ``plan[0]`` and shrunk to carry
+        that route's share of the remainder (its in-flight packets keep
+        their per-packet route tags); every other plan route gets a fresh
+        sibling flow starting now.  Returns the flow ids carrying the
+        payload from here on (``fid`` first).  Each sibling re-issues a
+        source descriptor, so it pays ``t_inject`` again — re-striping is
+        not free, which is exactly why the controller only triggers it on
+        a detected congestion shift."""
+        if self._journal is not None:
+            raise RuntimeError("restripe under an active probe journal")
+        f = self._flows[fid]
+        if f.resource is not None:
+            raise ValueError("cannot restripe a resource occupancy")
+        if f.start_s is None:
+            raise ValueError(f"flow {fid} has not started; nothing is "
+                             "committed yet — re-plan the whole transfer")
+        rem = self.unsent_bytes(fid)
+        routes: list[tuple[int, ...]] = []
+        fracs: list[float] = []
+        for route, frac in plan:
+            route = tuple(route)
+            if route[0] != f.route[0] or route[-1] != f.route[-1]:
+                raise ValueError(f"plan route {route} does not join "
+                                 f"{f.route[0]}->{f.route[-1]}")
+            if frac > 0.0:
+                routes.append(route)
+                fracs.append(float(frac))
+        if rem <= 0.0 or not routes:
+            return [fid]
+        total = sum(fracs)
+        shares = [rem * fr / total for fr in fracs]
+        # the original flow keeps plan[0]'s share; packets it already fed
+        # were all full-size (the short tail packet is by construction the
+        # LAST one, and rem > 0 means it has not been fed)
+        sent_bytes = f.sent * f.pkt_bytes
+        f.route = routes[0]
+        f.nbytes = sent_bytes + shares[0]
+        f.npkts = f.sent + int(-(-shares[0] // f.pkt_bytes))
+        out = [fid]
+        for route, share in zip(routes[1:], shares[1:]):
+            nfid = self.inject(
+                route[0], route[-1], share, start_s=self._frontier,
+                route=route, channel=f.channel, cls=f.cls,
+                label=(f.label + "+restripe") if f.label else "restripe")
+            nf = self._flows[nfid]
+            nf.src_over = f.src_over       # same endpoint overheads as the
+            nf.dst_over = f.dst_over       # leg it split from (GPU touch,
+            nf.pace_s = f.pace_s           # outbound read pacing)
+            out.append(nfid)
+        return out
 
     def prune(self) -> int:
         """Drop finished flows from the registry; returns how many.

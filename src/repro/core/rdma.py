@@ -93,10 +93,24 @@ class RdmaEndpoint:
     def __init__(self, torus: Torus, rank: int, *, tlb_entries: int = 512,
                  engines: int = 2, cq_slots: int | None = None,
                  net: apelink.NetModel | None = None,
-                 sim: "object | None" = None) -> None:
+                 sim: "object | None" = None,
+                 descriptor_bytes: float | None = None) -> None:
         self.torus = torus
         self.rank = rank
         self.engines = engines
+        # §2.1 per-class command queues: with ``descriptor_bytes`` set and
+        # a shared sim attached, put_pages occupies the host-IF FIFO as a
+        # CHAIN of descriptor-granular occupancies instead of one
+        # monolithic drain, so a queued higher-class descriptor (a decode
+        # collective's DMA) overtakes the remaining bulk descriptors at
+        # the next boundary instead of waiting out the whole PUT.  The
+        # default None keeps the monolithic drain — bitwise identical to
+        # the pre-descriptor timeline.
+        self.descriptor_bytes = (float(descriptor_bytes)
+                                 if descriptor_bytes else None)
+        if self.descriptor_bytes is not None and self.descriptor_bytes <= 0:
+            raise ValueError(
+                f"descriptor_bytes must be > 0, got {descriptor_bytes}")
         # shared fabric timeline: when attached, put_pages/get_time inject
         # their host-IF DMA drain and wire legs as flows on it instead of
         # summing closed-form terms, so concurrent operations — this
@@ -212,6 +226,7 @@ class RdmaEndpoint:
                   dst_region: Region | None = None,
                   dst_pages: Sequence[int] | None = None,
                   faults=None, schedule=None, stripes=None,
+                  restripe_s: float | None = None,
                   cls: TrafficClass = TrafficClass.BULK) -> float:
         """Bulk one-sided PUT of selected ``page_nbytes``-sized pages of a
         registered region to rank ``dst``; returns the modelled seconds.
@@ -243,6 +258,17 @@ class RdmaEndpoint:
         ``t_receive`` per additional stripe.  ``cls`` tags every timeline
         leg's traffic class (default ``BULK`` — a migration must not
         starve decode on a QoS fabric).
+
+        **Mid-flight re-striping**: with a shared sim attached, pass
+        ``restripe_s`` (seconds after the DMA drain) to set a checkpoint:
+        the timeline runs to it, each leg's unsent remainder is re-probed
+        against the *current* congestion (``fabric.striped_routes``) and
+        re-split across the fresh plan — in-flight packets keep their
+        per-packet route tags, only the uncommitted remainder moves.  A
+        leg the host-IF backlog kept from starting by the checkpoint
+        flies as originally planned (best-effort; nothing to re-split
+        safely).  Re-striping pays a descriptor re-issue per new sibling,
+        so callers trigger it on detected congestion shift, not always.
         """
         self._check_registered(region)
         if page_nbytes <= 0:
@@ -291,9 +317,25 @@ class RdmaEndpoint:
         # then the payload walks its route(s) packet by packet — all legs
         # contending with whatever else is in flight on the sim
         start = self.sim.now
-        dma = self.sim.occupy(("hostif", self.rank), t_dma,
-                              start_s=start + t_src, cls=cls,
-                              label=f"put_dma r{self.rank}")
+        desc = self.descriptor_bytes
+        if desc is not None and nbytes > desc:
+            # §2.1 per-class command queue: the drain is a CHAIN of
+            # descriptor occupancies, preemptible at every boundary
+            from repro.core.fabric.cost import hostif_descriptors
+            chunks = hostif_descriptors(nbytes, desc)
+            dma = None
+            for i, cb in enumerate(chunks):
+                dma = self.sim.occupy(
+                    ("hostif", self.rank), t_dma * (cb / nbytes),
+                    start_s=start + t_src,
+                    after=(dma,) if dma is not None else (), cls=cls,
+                    label=f"put_dma r{self.rank} d{i}")
+            n_desc = len(chunks)
+        else:
+            dma = self.sim.occupy(("hostif", self.rank), t_dma,
+                                  start_s=start + t_src, cls=cls,
+                                  label=f"put_dma r{self.rank}")
+            n_desc = 1
         wire_fids = []
         for i, (s, b) in enumerate(legs):
             route = s.route if s.collective == fabric.P2P else None
@@ -301,13 +343,38 @@ class RdmaEndpoint:
                 self.rank, dst, b, route=route, after=(dma,), cls=cls,
                 label=f"put {self.rank}->{dst}"
                       + (f" stripe{i}" if len(legs) > 1 else "")))
+        restriped = 0
+        if restripe_s is not None and hasattr(self.sim, "restripe"):
+            checkpoint = start + t_src + t_dma + float(restripe_s)
+            self.sim.run_until(checkpoint)
+            final_fids = []
+            for f in wire_fids:
+                rem = self.sim.unsent_bytes(f)
+                if rem <= 0.5 * page_nbytes:
+                    final_fids.append(f)     # landed or nearly so
+                    continue
+                try:
+                    plan = fabric.striped_routes(
+                        self.sim, self.rank, dst, rem,
+                        k=max(len(legs), 2), faults=faults, cls=cls)
+                    got = self.sim.restripe(f, plan)
+                except (ValueError, fabric.UnroutableError):
+                    got = [f]                # leg not started / no detours
+                restriped += len(got) - 1
+                final_fids.extend(got)
+            wire_fids = final_fids
+            # the reorder window matches every landed leg, including the
+            # re-striped siblings
+            t_settle = (len(wire_fids) - 1) * self.net.t_receive
         wire_end = max(self.sim.finish_s(f) for f in wire_fids)
         total = (wire_end - start) + t_settle + t_dst
         self.last_put_report = {"total_s": total, "isolated_s": isolated,
                                 "dma_s": t_dma, "wire_s": t_wire,
                                 "translate_s": t_src + t_dst,
                                 "stripes": len(legs),
-                                "settle_s": t_settle}
+                                "settle_s": t_settle,
+                                "descriptors": n_desc,
+                                "restriped": restriped}
         return total
 
     def get_time(self, src: int, nbytes: int, region: Region, *,

@@ -172,6 +172,8 @@ class ServingCluster:
                  fidelity: str = "packet",
                  modelled: bool = False,
                  n_params: int | float | None = None,
+                 descriptor_bytes: float | None = None,
+                 restripe_s: float | None = None,
                  slo: SloPolicy | None = None) -> None:
         self.cfg = cfg
         self.torus = torus
@@ -216,7 +218,8 @@ class ServingCluster:
             lm = PagedLM(cfg, params, max_batch=max_batch, max_seq=max_seq,
                          page_tokens=page_tokens, pool_pages=pool_pages,
                          torus=torus, tp_axes=tp_axes, rank=r,
-                         sim=self.sim, net=self.net, modelled=modelled)
+                         sim=self.sim, net=self.net, modelled=modelled,
+                         descriptor_bytes=descriptor_bytes)
             self.nodes[r] = ClusterNode(
                 r, lm, Engine(lm, chunked_prefill=chunked_prefill))
         self.page_tokens = page_tokens
@@ -227,6 +230,11 @@ class ServingCluster:
                            for x in jax.tree.leaves(params))
         self.n_params = int(n_params)
         self.modelled = modelled
+        # mid-flight re-striping checkpoint for migration PUTs: after
+        # ``restripe_s`` of wire time the remaining pages are re-split
+        # across freshly probed routes (``RdmaEndpoint.put_pages``).
+        # None (default) keeps every PUT on its launch-time routes.
+        self.restripe_s = restripe_s
         self.slo = slo
         self.admission_queue: collections.deque[Request] = \
             collections.deque()
@@ -526,7 +534,8 @@ class ServingCluster:
             dst_region=dst_node.lm.allocator.region,
             dst_pages=dst_node.lm.slot_pages[new_slot][:state.n_pages],
             schedule=None if stripes is not None else sched,
-            stripes=stripes)
+            stripes=stripes, restripe_s=self.restripe_s,
+            faults=self.faults)
         src_node.engine.detach(old_slot)
         src_node.lm.free_slot(old_slot)
         req.slot = new_slot

@@ -171,6 +171,7 @@ class PagedLM:
                  sim: fabric.FabricSim | None = None,
                  cost_backend: str = "analytic",
                  cost_fidelity: str = "packet",
+                 descriptor_bytes: float | None = None,
                  modelled: bool = False) -> None:
         assert cfg.family in ("dense", "moe", "vlm")
         self.cfg = cfg
@@ -206,7 +207,8 @@ class PagedLM:
         # with every other node's traffic on the same torus links
         self.sim = sim
         self.endpoint = RdmaEndpoint(self.torus, rank=rank, net=self.net,
-                                     sim=sim)
+                                     sim=sim,
+                                     descriptor_bytes=descriptor_bytes)
         self.allocator = PageAllocator(
             self.n_pages, page_tokens,
             bytes_per_token=self.bytes_per_token, endpoint=self.endpoint)

@@ -212,6 +212,7 @@ def replay(cluster: ServingCluster, trace: list[TraceRequest], *,
            rebalance: str = "proactive", rebalance_threshold: int = 2,
            rebalance_every_s: float | None = None,
            session_affinity: bool = True,
+           qos_ctl=None, background=None,
            max_steps: int = 2_000_000) -> ReplayReport:
     """Drive ``cluster`` through ``trace``, event-driven per node.
 
@@ -231,6 +232,22 @@ def replay(cluster: ServingCluster, trace: list[TraceRequest], *,
     hooks scan every node, so they run at most once per
     ``rebalance_every_s`` of event-clock time (default: one token-time)
     — the same cadence for either mode, keeping the comparison fair.
+
+    ``qos_ctl`` attaches a closed-loop QoS controller
+    (``fabric.QosController``): at every hook tick it receives the
+    per-token latencies of the requests that finished inside the window
+    and may retune the live arbitration policy through ``sim.set_qos``.
+    The controller is latched quiescent — on a replay where it never
+    leaves the safe band it issues zero retunes, and the run is bitwise
+    identical to ``qos_ctl=None``.
+
+    ``background`` is a per-hook traffic callback ``(cluster, t)``:
+    cross-traffic the request trace does not carry (checkpoint streams,
+    a co-tenant's decode collectives) injected at every hook tick so it
+    genuinely overlaps — in sim time — the migration PUTs priced inside
+    the same window.  The event-driven driver otherwise serialises the
+    fabric: a PUT runs the shared timeline to completion, so traffic
+    injected at later event times can never contend with it.
 
     TTFT = first-token window end - arrival; per-token latency =
     (finish - first token) / (output tokens - 1).  Shed requests count
@@ -255,6 +272,7 @@ def replay(cluster: ServingCluster, trace: list[TraceRequest], *,
     eps = 1e-12
     hook_dt = t_tok if rebalance_every_s is None else rebalance_every_s
     last_hook = -float("inf")
+    win_tpts: list[float] = []   # per-token latencies finished this window
 
     def has_work(n) -> bool:
         e = n.engine
@@ -315,6 +333,9 @@ def replay(cluster: ServingCluster, trace: list[TraceRequest], *,
                 # token
                 req.finish_s = end if req.first_token_s is None \
                     else max(end, req.first_token_s)
+                if qos_ctl is not None and len(req.out_tokens) > 1:
+                    win_tpts.append((req.finish_s - req.first_token_s)
+                                    / (len(req.out_tokens) - 1))
             eng.window_first = []
             eng.window_finished = []
             # a step that moved nothing (pool temporarily starved by an
@@ -322,13 +343,23 @@ def replay(cluster: ServingCluster, trace: list[TraceRequest], *,
             # than busy-looping at the same instant
             busy[r] = end if tokens > 0 else t + t_tok
             steps += 1
-        if rebalance != "none" and t >= last_hook + hook_dt:
+        if (rebalance != "none" or qos_ctl is not None) \
+                and t >= last_hook + hook_dt:
             last_hook = t
+            if qos_ctl is not None:
+                # controller first: a retune this window shapes the very
+                # migrations the rebalancer is about to probe/price
+                qos_ctl.window(cluster.sim, win_tpts)
+                win_tpts = []
+            if background is not None:
+                background(cluster, t)
             if rebalance == "proactive":
                 moves = cluster.rebalance_proactive()
-            else:
+            elif rebalance == "reactive":
                 m = cluster.rebalance(threshold=rebalance_threshold)
                 moves = [] if m is None else [m]
+            else:
+                moves = []
             for m in moves:
                 # the destination resumes no earlier than the PUT's
                 # contention-priced completion: the pages must land

@@ -1,0 +1,420 @@
+"""Closed-loop QoS: the ``QosController`` control law, windowed
+``class_stats`` deltas, live ``set_qos`` retunes on both fabric tiers
+(warm-started on the fluid one), ``run_until`` checkpointing, mid-flight
+re-striping, descriptor-granular BULK preemption, and the escape-credit
+x descriptor-preemption credit invariant."""
+import random
+
+import pytest
+
+from repro.core.apelink import NetModel
+from repro.core.fabric import autotune
+from repro.core.fabric.fluid import FluidSim
+from repro.core.fabric.qos import QosPolicy, TrafficClass
+from repro.core.fabric.qosctl import QosController, QosCtlPolicy
+from repro.core.fabric.sim import FabricSim
+from repro.core.rdma import RdmaEndpoint
+from repro.core.topology import Torus
+
+D = TrafficClass.DECODE
+B = TrafficClass.BULK
+
+
+class _Slo:
+    token_target_s = 0.050
+    headroom = 0.8          # at-risk band starts at 40 ms
+
+
+class _StubSim:
+    """Just the controller's actuator surface: canned per-class byte
+    deltas plus a record of every ``set_qos`` call."""
+
+    def __init__(self, decode_delta=1.0):
+        self._total = {c: 0.0 for c in TrafficClass}
+        self._decode_delta = decode_delta
+        self.applied: list[QosPolicy] = []
+
+    def class_stats(self, since=None):
+        out = dict(self._total)
+        if since is not None:
+            out = {c: out[c] - since.get(c, 0.0) for c in out}
+        return out
+
+    def tick(self):
+        self._total[D] += self._decode_delta
+
+    def set_qos(self, policy):
+        self.applied.append(policy)
+
+
+def _ctl(sim_decode=1.0, **pol):
+    policy = QosCtlPolicy(**pol) if pol else QosCtlPolicy()
+    return QosController(QosPolicy(), _Slo(), policy=policy), \
+        _StubSim(sim_decode)
+
+
+# --- control law ----------------------------------------------------------
+
+def test_ctl_policy_validation():
+    for bad in (dict(gain=1.0), dict(gain=0.5), dict(decay=0.0),
+                dict(decay=1.0), dict(max_boost=0.9), dict(floor=0.0),
+                dict(floor=1.5), dict(credit_gain=-0.1),
+                dict(min_credit_frac=0.25)):
+        with pytest.raises(ValueError):
+            QosCtlPolicy(**bad)
+
+
+def test_ctl_rejects_single_class_baseline():
+    with pytest.raises(ValueError):
+        QosController(QosPolicy(single_class=True), _Slo())
+
+
+def test_ctl_latched_quiescent_until_first_at_risk():
+    ctl, sim = _ctl()
+    for _ in range(5):
+        sim.tick()
+        assert ctl.window(sim, [0.010, 0.012]) is False   # safe band
+    assert not ctl.engaged and ctl.n_retunes == 0
+    assert sim.applied == [] and ctl.boost == 1.0
+    assert [b for b, _, _ in ctl.history] == ["safe"] * 5
+    # idle windows (no finished requests) keep the latch closed too
+    assert ctl.window(sim, []) is False
+    assert ctl.history[-1][0] == "idle" and not ctl.engaged
+
+
+def test_ctl_boosts_at_risk_and_caps():
+    ctl, sim = _ctl(gain=2.0, max_boost=3.0)
+    for expect in (2.0, 3.0, 3.0):
+        sim.tick()
+        ctl.window(sim, [0.045])                          # at-risk band
+        assert ctl.boost == pytest.approx(expect)
+    # cap reached: the third window changed nothing -> no third retune
+    assert ctl.n_retunes == 2
+    w = sim.applied[-1].weights[D]
+    assert w == pytest.approx(QosPolicy().weights[D] * 3.0)
+
+
+def test_ctl_at_risk_holds_without_decode_bytes():
+    ctl, sim = _ctl(sim_decode=0.0)
+    sim.tick()
+    assert ctl.window(sim, [0.045]) is False
+    assert ctl.engaged and ctl.boost == 1.0   # engaged but held: the
+    #                                           replica is compute-bound
+
+
+def test_ctl_releases_to_floor_on_breach():
+    ctl, sim = _ctl(decay=0.5, floor=0.2)
+    sim.tick()
+    ctl.window(sim, [0.045])                  # engage (at-risk)
+    for expect in (0.8, 0.4, 0.2, 0.2):       # 1.6 * 0.5^k, floored
+        sim.tick()
+        ctl.window(sim, [0.080])              # breached: release
+        assert ctl.boost == pytest.approx(expect)
+    w = sim.applied[-1].weights[D]
+    assert w == pytest.approx(QosPolicy().weights[D] * 0.2)
+
+
+def test_ctl_retuned_credit_floor():
+    ctl, _ = _ctl(floor=0.05, decay=0.25, min_credit_frac=0.08)
+    ctl.engaged = True
+    ctl.boost = 0.05                          # deep release
+    pol = ctl.retuned()
+    total = sum(pol.credit_frac.values())
+    for cls in TrafficClass:
+        assert pol.credit_frac[cls] >= 0.08 * total - 1e-12
+    assert pol.weights[D] == pytest.approx(QosPolicy().weights[D] * 0.05)
+
+
+def test_ctl_tuned_knobs_load_from_artifact(tmp_path, monkeypatch):
+    cfg = autotune.FabricConfig(torus_dims=(4, 4), ctl_gain=2.5,
+                                ctl_decay=0.45, ctl_floor=0.33)
+    path = tmp_path / "best_configs.json"
+    autotune.save_best_configs(
+        {"serving": {"config": cfg.to_jsonable()}}, path=str(path))
+    monkeypatch.setenv("BEST_CONFIGS", str(path))
+    pol = QosCtlPolicy.tuned()
+    assert (pol.gain, pol.decay, pol.floor) == (2.5, 0.45, 0.33)
+    monkeypatch.setenv("BEST_CONFIGS", "0")
+    assert QosCtlPolicy.tuned() == QosCtlPolicy()
+
+
+# --- windowed class_stats (both tiers) ------------------------------------
+
+def _tiers():
+    t = Torus((4,))
+    return [FabricSim(t, qos=QosPolicy()), FluidSim(t, qos=QosPolicy())]
+
+
+@pytest.mark.parametrize("tier", ["packet", "fluid"])
+def test_identical_windows_identical_deltas(tier):
+    """Two byte-identical traffic windows must report byte-identical
+    per-class deltas through ``class_stats(since=...)`` — the controller
+    steers on windows, so windowing must not smear."""
+    sim = _tiers()[0 if tier == "packet" else 1]
+
+    def window(t0):
+        before = sim.class_stats()
+        sim.inject(0, 1, 256 * 1024, start_s=t0, cls=D)
+        sim.inject(1, 3, 512 * 1024, start_s=t0, cls=B)
+        sim.inject(2, 0, 128 * 1024, start_s=t0 + 1e-4,
+                   cls=TrafficClass.COLLECTIVE)
+        sim.run()
+        return sim.class_stats(since=before)
+
+    d1, d2 = window(0.0), window(sim.now + 1e-3)
+    assert d1 == d2                           # bitwise, not approx
+    assert d1[D] > 0.0 and d1[B] > 0.0
+    # and the deltas telescope back to the absolute totals
+    total = sim.class_stats()
+    for cls in TrafficClass:
+        assert total[cls] == pytest.approx(d1[cls] + d2[cls])
+
+
+# --- live set_qos ---------------------------------------------------------
+
+def _put_under_decode(sim_cls, retune_at=None, boost_bulk=None):
+    """32 MB BULK vs a long DECODE backlog on the same link; optionally
+    retune mid-drain and return the BULK finish time."""
+    t = Torus((8,))
+    sim = sim_cls(t, qos=QosPolicy())
+    sim.inject(0, 1, 512e6, cls=D)
+    fid = sim.inject(0, 1, 32e6, cls=B)
+    if retune_at is not None:
+        sim.run_until(retune_at)
+        sim.set_qos(QosPolicy(weights={D: boost_bulk}))
+    return sim.finish_s(fid)
+
+
+@pytest.mark.parametrize("sim_cls", [FabricSim, FluidSim])
+def test_set_qos_live_release_speeds_bulk(sim_cls):
+    static = _put_under_decode(sim_cls)
+    released = _put_under_decode(sim_cls, retune_at=1e-3, boost_bulk=2.0)
+    assert released < static * 0.75           # DECODE 16 -> 2 mid-drain
+
+
+@pytest.mark.parametrize("sim_cls", [FabricSim, FluidSim])
+def test_set_qos_rejects_channel_count_change(sim_cls):
+    sim = sim_cls(Torus((4,)), qos=QosPolicy())
+    with pytest.raises(ValueError):
+        sim.set_qos(QosPolicy(single_class=True))
+
+
+def test_set_qos_packet_credits_stay_conserved():
+    """The retune re-partitions credits as a DELTA on live links; once
+    the fabric drains, every link balance equals the NEW partition —
+    in-flight debits and loans were carried over, not leaked."""
+    sim = FabricSim(Torus((4,)), qos=QosPolicy())
+    sim.inject(0, 2, 4 << 20, cls=B)
+    sim.inject(1, 3, 4 << 20, cls=D)
+    sim.run_until(2e-4)
+    new = QosPolicy(credit_frac={D: 0.55, B: 0.05})
+    sim.set_qos(new)
+    sim.run()
+    part = new.partition_credits(sim.credit_bytes)
+    for link in sim._links.values():
+        for c in range(len(part)):
+            assert link.credits[c] == pytest.approx(part[c])
+
+
+# --- fluid warm start (weights-only retunes) ------------------------------
+
+def test_fluid_warm_start_bitwise_equals_cold():
+    def solve(warm):
+        sim = FluidSim(Torus((8,)), qos=QosPolicy())
+        rnd = random.Random(7)
+        fids = [sim.inject(rnd.randrange(8), (rnd.randrange(7) + f + 1) % 8,
+                           rnd.randint(1 << 20, 8 << 20),
+                           cls=rnd.choice(list(TrafficClass)))
+                for f in range(12)]
+        sim.run_until(5e-4)
+        if not warm:
+            sim._inc_cache = None             # force a cold rebuild
+        sim.set_qos(QosPolicy(weights={D: 4.0, B: 3.0}))
+        return [sim.finish_s(f) for f in fids], sim.n_warm_solves
+
+    hot, n_hot = solve(True)
+    cold, n_cold = solve(False)
+    assert hot == cold                        # bitwise, not approx
+    assert n_hot > n_cold                     # the retune solve was warm
+
+
+# --- run_until checkpointing ----------------------------------------------
+
+@pytest.mark.parametrize("sim_cls", [FabricSim, FluidSim])
+def test_run_until_checkpoints_preserve_finishes(sim_cls):
+    def finishes(checkpoints):
+        sim = sim_cls(Torus((6,)), qos=QosPolicy())
+        rnd = random.Random(3)
+        fids = [sim.inject(rnd.randrange(6), (rnd.randrange(5) + f + 1) % 6,
+                           rnd.randint(256 << 10, 4 << 20),
+                           cls=rnd.choice(list(TrafficClass)))
+                for f in range(10)]
+        for t in checkpoints:
+            sim.run_until(t)
+        sim.run()
+        return [sim.finish_s(f) for f in fids]
+
+    direct, stepped = finishes([]), finishes([1e-4, 5e-4, 2e-3])
+    if sim_cls is FabricSim:
+        assert direct == stepped          # event-driven: bitwise
+    else:
+        # the fluid tier settles drain integrals at every checkpoint, so
+        # the float summation re-associates — equal to 1e-9 relative
+        assert direct == pytest.approx(stepped, rel=1e-9, abs=0.0)
+
+
+# --- mid-flight re-striping ------------------------------------------------
+
+def _ring_routes(n, src, dst):
+    fwd = tuple(range(src, dst + 1))
+    bwd = tuple((src - i) % n for i in range((src - dst) % n + 1))
+    return fwd, bwd
+
+
+@pytest.mark.parametrize("sim_cls", [FabricSim, FluidSim])
+def test_restripe_conserves_bytes(sim_cls):
+    sim = sim_cls(Torus((8,)), qos=QosPolicy())
+    fwd, bwd = _ring_routes(8, 0, 3)
+    total = 16 << 20
+    fid = sim.inject(0, 3, total, route=fwd, cls=B)
+    sim.run_until(1e-3)
+    rem = sim.unsent_bytes(fid)
+    assert 0.0 < rem < total                  # genuinely half-sent
+    fids = sim.restripe(fid, [(fwd, 0.5), (bwd, 0.5)])
+    assert fids[0] == fid and len(fids) == 2
+    carried = sum(sim._flows[f].nbytes for f in fids)
+    assert carried == pytest.approx(total)    # no byte invented or lost
+    for f in fids:
+        sim.finish_s(f)                       # every leg completes
+        assert sim.unsent_bytes(f) == 0.0
+
+
+def test_restripe_rejects_bad_plans():
+    sim = FabricSim(Torus((8,)), qos=QosPolicy())
+    fwd, _ = _ring_routes(8, 0, 3)
+    fid = sim.inject(0, 3, 1 << 20, route=fwd, cls=B)
+    with pytest.raises(ValueError):           # nothing committed yet
+        sim.restripe(fid, [(fwd, 1.0)])
+    sim.run_until(1e-4)
+    with pytest.raises(ValueError):           # route joins wrong endpoints
+        sim.restripe(fid, [((0, 1, 2), 1.0)])
+
+
+# --- descriptor-granular preemption ---------------------------------------
+
+_PAGE = 65536
+
+
+def _endpoints(descriptor_bytes, npages):
+    torus = Torus((4, 4))
+    net = NetModel()
+    sim = FabricSim(torus, net, qos=QosPolicy())
+    src = RdmaEndpoint(torus, rank=0, net=net, sim=sim,
+                       descriptor_bytes=descriptor_bytes)
+    dst = RdmaEndpoint(torus, rank=1, net=net, sim=sim)
+    reg = src.register(npages * _PAGE)
+    dreg = dst.register(npages * _PAGE)
+    src.translate_region(reg)                 # warm the TLB
+    dst.translate_region(dreg)
+    return sim, src, dst, reg, dreg
+
+
+def _put(src, dst, reg, dreg, npages):
+    return src.put_pages(dst.rank, reg, list(range(npages)),
+                         page_nbytes=_PAGE, dst_endpoint=dst,
+                         dst_region=dreg, dst_pages=list(range(npages)))
+
+
+def test_put_pages_descriptor_chain_count():
+    npages = 128                              # 8 MB payload
+    sim, src, dst, reg, dreg = _endpoints(256 * 1024, npages)
+    _put(src, dst, reg, dreg, npages)
+    assert src.last_put_report["descriptors"] == 32   # ceil(8 MB/256 KB)
+    sim, src, dst, reg, dreg = _endpoints(None, npages)
+    _put(src, dst, reg, dreg, npages)
+    assert src.last_put_report["descriptors"] == 1    # monolithic
+
+
+def _mid_drain_wait(descriptor_bytes):
+    npages = 128
+    sim, src, dst, reg, dreg = _endpoints(descriptor_bytes, npages)
+    t_hot = src.translate_region(reg)
+    _put(src, dst, reg, dreg, npages)
+    t_mid = t_hot + 0.25 * src.last_put_report["dma_s"]
+    sim, src, dst, reg, dreg = _endpoints(descriptor_bytes, npages)
+    fin = sim.occupy(("hostif", 0), 50e-6, start_s=t_mid,
+                     cls=D, label="decode_probe")
+    _put(src, dst, reg, dreg, npages)
+    return sim.finish_s(fin) - t_mid - 50e-6
+
+
+def test_descriptor_preemption_cuts_decode_wait():
+    """A DECODE command landing mid-drain of a BULK DMA waits at most
+    one descriptor, not the whole transfer (arXiv:1311.1741 §2.1)."""
+    w_mono = _mid_drain_wait(None)
+    w_desc = _mid_drain_wait(256 * 1024)
+    assert w_mono > 1e-4                      # the mono drain does block
+    assert w_desc < w_mono / 2.0
+
+
+# --- escape credit x descriptor preemption (seeded repro) -----------------
+
+def _assert_credits_restored(sim):
+    for link in sim._links.values():
+        for c, part in enumerate(sim._class_credits):
+            assert link.credits[c] == pytest.approx(part), \
+                "idle link holds a leaked/unrepaid credit balance"
+
+
+def test_escape_credit_repaid_under_descriptor_preemption():
+    """Seeded repro: a descriptor-chained 4 MB BULK PUT drains through a
+    random multi-class storm on a wrap-around ring that credit-deadlocks
+    (escape-credit loans fire while BULK heads are being preempted at
+    descriptor boundaries).  The loaned credit must be repaid in full:
+    every flow finishes and every idle link balance equals the policy
+    partition."""
+    rnd = random.Random(1)
+    torus = Torus((8,))
+    net = NetModel()
+    sim = FabricSim(torus, net, qos=QosPolicy())
+    src = RdmaEndpoint(torus, rank=0, net=net, sim=sim,
+                       descriptor_bytes=128 * 1024)
+    dst = RdmaEndpoint(torus, rank=5, net=net, sim=sim)
+    npages = 64
+    reg = src.register(npages * _PAGE)
+    dreg = dst.register(npages * _PAGE)
+    fids = []
+    for _ in range(48):
+        s = rnd.randrange(8)
+        d = rnd.randrange(8)
+        while d == s:
+            d = rnd.randrange(8)
+        fids.append(sim.inject(
+            s, d, rnd.randint(256 * 1024, 1 << 20),
+            cls=rnd.choice([TrafficClass.CONTROL, D,
+                            TrafficClass.COLLECTIVE])))
+    _put(src, dst, reg, dreg, npages)
+    sim.run()
+    assert sim.deadlock_breaks > 0, \
+        "storm no longer deadlocks; re-seed the repro"
+    assert src.last_put_report["descriptors"] == 32
+    for f in fids:
+        assert sim._flows[f].finish_s is not None
+    _assert_credits_restored(sim)
+
+
+def test_escape_credit_repaid_plain_storm():
+    """The pure-deadlock invariant (no RDMA in the loop): after recovery
+    the loaned escape credits are all repaid."""
+    rnd = random.Random(1)
+    sim = FabricSim(Torus((8,)), qos=QosPolicy())
+    for _ in range(64):
+        s = rnd.randrange(8)
+        d = rnd.randrange(8)
+        while d == s:
+            d = rnd.randrange(8)
+        sim.inject(s, d, rnd.randint(256 * 1024, 1 << 20),
+                   cls=rnd.choice(list(TrafficClass)))
+    sim.run()
+    assert sim.deadlock_breaks > 0
+    _assert_credits_restored(sim)

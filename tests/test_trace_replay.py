@@ -302,3 +302,68 @@ def test_proactive_requires_slo(cfg):
     cl = _cluster(cfg)
     with pytest.raises(ValueError, match="SloPolicy"):
         cl.rebalance_proactive()
+
+
+# ---------------------------------------------------------------------------
+# closed-loop QoS in the replay driver
+# ---------------------------------------------------------------------------
+
+def _qos_cluster(cfg):
+    from repro.core import fabric
+    base = fabric.QosPolicy()
+    cl = _cluster(cfg, torus=Torus((2, 2)), max_batch=4, max_seq=576,
+                  page_tokens=16, chunked_prefill=True, qos=base,
+                  slo=SloPolicy(token_target_s=0.066, queue_limit=64,
+                                max_queue_wait_s=2.0))
+    return cl, base
+
+
+def test_replay_quiescent_controller_is_bitwise_invisible(cfg):
+    """A controller that never leaves the safe band must not perturb the
+    replay at all: same metrics as no controller, zero retunes."""
+    from repro.core import fabric
+    tr = _small_trace(n=24, seed=5, util=0.4)
+    cl0, _ = _qos_cluster(cfg)
+    plain = replay(cl0, tr, rebalance="proactive").metrics()
+    cl1, base = _qos_cluster(cfg)
+    ctl = fabric.QosController(base, cl1.slo)
+    watched = replay(cl1, tr, rebalance="proactive", qos_ctl=ctl).metrics()
+    assert plain == watched
+    assert ctl.n_retunes == 0 and not ctl.engaged
+    assert any(b == "safe" for b, _, _ in ctl.history)
+
+
+def test_replay_controller_fires_under_tight_slo(cfg):
+    """The same trace under a 1000x tighter token SLO must engage the
+    controller and actually retune the live fabric policy."""
+    from repro.core import fabric
+    tr = _small_trace(n=24, seed=5, util=0.9)
+    cl, base = _qos_cluster(cfg)
+    cl.slo = dataclasses.replace(cl.slo, token_target_s=1e-5)
+    ctl = fabric.QosController(base, cl.slo)
+    rep = replay(cl, tr, rebalance="proactive", qos_ctl=ctl)
+    assert rep.n_finished > 0
+    assert ctl.engaged and ctl.n_retunes >= 1
+    assert cl.sim.qos.weights[fabric.TrafficClass.DECODE] \
+        != base.weights[fabric.TrafficClass.DECODE]
+
+
+def test_replay_background_callback_injects_cross_traffic(cfg):
+    """``background`` runs once per hook tick with the cluster and the
+    hook time; injected flows land on the shared timeline."""
+    from repro.core import fabric
+    tr = _small_trace(n=16, seed=5, util=0.4)
+    calls = []
+
+    def background(cluster, t):
+        calls.append(t)
+        cluster.sim.inject(0, 1, 1 << 20, cls=fabric.TrafficClass.BULK)
+
+    cl, _ = _qos_cluster(cfg)
+    quiet = cl.sim.class_stats()
+    replay(cl, tr, rebalance="proactive", background=background,
+           rebalance_every_s=0.25)
+    noisy = cl.sim.class_stats(since=quiet)
+    assert len(calls) >= 2
+    assert calls == sorted(calls)
+    assert noisy[fabric.TrafficClass.BULK] >= len(calls) * (1 << 20)
