@@ -38,7 +38,7 @@ import numpy as np
 MODULES = ["apelink_eff", "dma_overlap", "tlb", "latency", "bandwidth",
            "fabric_cost", "overlap", "migration", "contention", "qos",
            "lofamo", "nextgen", "roofline", "simscale", "autotune",
-           "trace_replay", "qosctl"]
+           "trace_replay", "qosctl", "telemetry"]
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -1,0 +1,192 @@
+"""Telemetry-hub gates: invisibility, exactness, overhead, trace schema.
+
+The unified fabric telemetry layer (``core/fabric/telemetry.py``) is
+pure observability — so the claims it must hold are about *not
+changing* anything, and about its own bookkeeping being exact:
+
+1. **``invisibility_maxdiff``** (0 tol): the seeded 16-node replay with
+   a ``Telemetry`` hub attached reports bitwise-identical
+   ``ReplayReport.metrics()`` to the same replay with ``telemetry=None``
+   — the hub observes the timeline without perturbing it (the same
+   discipline as ``qos=None`` and the quiescent controller).
+2. **``counter_stats_maxdiff``** (0 tol): after an instrumented replay,
+   the hub's per-link counters cross-check EXACTLY against the sim's
+   own ``link_stats()`` — both sides accumulated the same floats in
+   the same order, so the diff is 0.0, not epsilon.
+3. **``stats_key_parity``** (0 tol): ``FabricSim`` and ``FluidSim``
+   return the same ``link_stats`` schema (same per-entry key set, same
+   deterministic key ordering) for the same fabric traffic.
+4. **``trace_schema_errors``** (0 tol) and **``trace_roundtrip_delta``**
+   (0 tol): the exported Chrome-trace JSON passes the
+   ``validate_perfetto`` schema check, and two independent same-seed
+   replays export BYTE-identical trace files.
+5. **``enabled_overhead_frac``** (lower): wall overhead of the enabled
+   hub on the 512-node fluid trace replay, bounded at <= 15%
+   (``OVERHEAD_BAR``).  ``TELEMETRY_FAST=1`` (the CI fast lane) skips
+   this 512-node section; the nightly lane runs it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import fabric
+from repro.core.topology import Torus
+from repro.serving.trace import replay
+
+from benchmarks.trace_replay import (FULL_DIMS, FULL_SEED, SMOKE_DIMS,
+                                     SMOKE_SEED, _cluster, _trace)
+
+OVERHEAD_BAR = 0.15           # enabled-mode wall overhead ceiling
+OVERHEAD_REQUESTS = 600       # 512-node overhead probe trace length
+
+
+def _replay_smoke(trace, tel):
+    cl = _cluster(SMOKE_DIMS, fidelity="fluid", queue_limit=48)
+    if tel is not None:
+        # attach the one hub everywhere the constructor seam would:
+        # cluster events, the shared sim, every endpoint
+        cl.telemetry = tel
+        cl.sim.telemetry = tel
+        for node in cl.nodes.values():
+            node.lm.endpoint.telemetry = tel
+    return cl, replay(cl, trace, rebalance="proactive")
+
+
+def _key_parity(seed: int) -> float:
+    """Same traffic on both tiers: 0.0 iff the link_stats schemas agree
+    on per-entry keys AND iterate in the same canonical order."""
+    torus = Torus(SMOKE_DIMS)
+    pkt = fabric.make_sim(torus, fidelity="packet")
+    flu = fabric.make_sim(torus, fidelity="fluid")
+    for s in (pkt, flu):
+        for i in range(8):
+            s.inject(i, (i + 5) % 16, 1.5e6,
+                     cls=fabric.TrafficClass.BULK, label=f"par{i}")
+            s.occupy(("hostif", i), 1e-4, cls=fabric.TrafficClass.BULK)
+        s.run()
+    sp, sf = pkt.link_stats(), flu.link_stats()
+    bad = 0.0
+    if list(sp.keys()) != list(sf.keys()):
+        bad += 1.0
+    inner = {tuple(v.keys()) for v in sp.values()} \
+        | {tuple(v.keys()) for v in sf.values()}
+    if inner != {("busy_s", "bytes", "class_bytes")}:
+        bad += 1.0
+    return bad
+
+
+def run() -> list[dict]:
+    fast = os.environ.get("TELEMETRY_FAST", "0") == "1"
+    seed = int(os.environ.get("BENCH_SEED", "0"))
+    rows: list[dict] = []
+
+    # --- invisibility: hub attached vs telemetry=None, same trace ----
+    tr = _trace(240, 16, 0.92, SMOKE_SEED + seed)
+    _, bare = _replay_smoke(tr, None)
+    tel = fabric.Telemetry()
+    cl, inst = _replay_smoke(tr, tel)
+    m0, m1 = bare.metrics(), inst.metrics()
+    rows.append(
+        {"bench": "telemetry", "metric": "invisibility_maxdiff",
+         "value": max(abs(m0[k] - m1[k]) for k in m0),
+         "gate": "lower", "tol": 0.0,
+         "note": "replay metrics, hub attached vs telemetry=None "
+                 "(must be exactly 0: observability never perturbs)"})
+
+    # --- counter exactness vs the sim's own accounting ---------------
+    rows.append(
+        {"bench": "telemetry", "metric": "counter_stats_maxdiff",
+         "value": tel.cross_check(cl.sim),
+         "gate": "lower", "tol": 0.0,
+         "note": "hub per-link counters vs sim.link_stats() after the "
+                 "instrumented replay (same float-addition order -> "
+                 "exactly 0)"})
+
+    # --- cross-tier link_stats schema parity -------------------------
+    rows.append(
+        {"bench": "telemetry", "metric": "stats_key_parity",
+         "value": _key_parity(seed),
+         "gate": "lower", "tol": 0.0,
+         "note": "FabricSim vs FluidSim link_stats key set + canonical "
+                 "ordering on identical traffic (0 = unified schema)"})
+
+    # --- trace export: schema validity + seeded byte-determinism -----
+    blob1 = tel.to_perfetto()
+    errs = fabric.validate_perfetto(json.loads(blob1))
+    tel2 = fabric.Telemetry()
+    tr2 = _trace(240, 16, 0.92, SMOKE_SEED + seed)
+    _replay_smoke(tr2, tel2)
+    blob2 = tel2.to_perfetto()
+    rows += [
+        {"bench": "telemetry", "metric": "trace_schema_errors",
+         "value": float(len(errs)),
+         "gate": "lower", "tol": 0.0,
+         "note": "validate_perfetto violations in the exported "
+                 "Chrome-trace JSON" + (f"; first: {errs[0]}" if errs
+                                        else "")},
+        {"bench": "telemetry", "metric": "trace_roundtrip_delta",
+         "value": 0.0 if blob1 == blob2 else 1.0,
+         "gate": "lower", "tol": 0.0,
+         "note": "two independent same-seed replays -> byte-identical "
+                 f".trace.json ({len(blob1)} bytes, "
+                 f"{tel.n_events} events)"},
+        {"bench": "telemetry", "metric": "trace_events",
+         "value": float(tel.n_events),
+         "note": f"events recorded on the 16-node replay "
+                 f"({tel.dropped} dropped, ring={tel.ring})"},
+    ]
+
+    # --- enabled-mode overhead on the 512-node fluid replay ----------
+    if not fast:
+        n_full = 1
+        for d in FULL_DIMS:
+            n_full *= d
+        trf = _trace(OVERHEAD_REQUESTS, n_full, 0.92, FULL_SEED + seed)
+
+        def wall(with_tel: bool) -> float:
+            cl = _cluster(FULL_DIMS, fidelity="fluid")
+            if with_tel:
+                hub = fabric.Telemetry()
+                cl.telemetry = hub
+                cl.sim.telemetry = hub
+                for node in cl.nodes.values():
+                    node.lm.endpoint.telemetry = hub
+            t0 = time.perf_counter()
+            replay(cl, trf, rebalance="proactive")
+            return time.perf_counter() - t0
+
+        # min-of-2 per mode: the overhead claim is about added work,
+        # not about scheduler noise on a loaded CI box
+        off = min(wall(False) for _ in range(2))
+        on = min(wall(True) for _ in range(2))
+        rows.append(
+            {"bench": "telemetry", "metric": "enabled_overhead_frac",
+             "value": max(on / off - 1.0, 0.0),
+             "gate": "lower", "tol": 0.50,
+             "note": f"512-node fluid replay wall overhead with the hub "
+                     f"attached (bar: <= {OVERHEAD_BAR:.0%}); "
+                     f"off {off * 1e3:.0f} ms, on {on * 1e3:.0f} ms"})
+    return rows
+
+
+def check(rows) -> list[str]:
+    vals = {r["metric"]: r["value"] for r in rows}
+    errs = []
+    for m in ("invisibility_maxdiff", "counter_stats_maxdiff",
+              "stats_key_parity", "trace_schema_errors",
+              "trace_roundtrip_delta"):
+        if vals[m] != 0.0:
+            errs.append(f"{m} = {vals[m]:.3g}: must be exactly 0")
+    if "enabled_overhead_frac" in vals \
+            and vals["enabled_overhead_frac"] > OVERHEAD_BAR:
+        errs.append(f"enabled-mode overhead "
+                    f"{vals['enabled_overhead_frac']:.1%} exceeds the "
+                    f"{OVERHEAD_BAR:.0%} ceiling on the 512-node replay")
+    return errs
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['bench']},{r['metric']},{r['value']}")

@@ -84,11 +84,15 @@ if [ "$LANE" = "fast" ]; then
     # the trace-replay smoke (TRACE_FAST=1) runs the 16-node SLO replay
     # and skips the 512-node nightly-scale one; the closed-loop QoS
     # smoke (QOSCTL_FAST=1) keeps all three gated rows (gain,
-    # preemption, quiescence) and skips the default-weights arm
+    # preemption, quiescence) and skips the default-weights arm; the
+    # telemetry smoke (TELEMETRY_FAST=1) keeps all exact-0 gates
+    # (invisibility, counter cross-check, trace schema/roundtrip) and
+    # skips the 512-node enabled-overhead measurement
     step "benches-quick" env SIMSCALE_FAST=1 AUTOTUNE_FAST=1 TRACE_FAST=1 \
-        QOSCTL_FAST=1 \
+        QOSCTL_FAST=1 TELEMETRY_FAST=1 \
         python -m benchmarks.run overlap dma_overlap fabric_cost \
-        migration contention qos simscale autotune trace_replay qosctl
+        migration contention qos simscale autotune trace_replay qosctl \
+        telemetry
 else
     step "tests-full" python -m pytest -x -q
     if [ "$LANE" = "nightly" ]; then
@@ -97,6 +101,14 @@ else
         # nightly workflow uploads (with the BENCH snapshot) as artifacts
         step "benches-nightly" env AUTOTUNE_NIGHTLY=1 \
             python -m benchmarks.run
+        # export the seeded 16-node replay timeline as Chrome-trace JSON
+        # and schema-check it; the nightly workflow uploads the file as
+        # an artifact next to best_configs.json, so every night leaves a
+        # Perfetto-loadable record of the fabric under the SLO replay
+        step "fabric-trace" python scripts/fabric_trace.py \
+            --nodes 16 --out fabric.trace.json
+        step "trace-validate" python scripts/fabric_trace.py \
+            --validate fabric.trace.json
     else
         step "benches-all" python -m benchmarks.run
     fi

@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Export (or validate) a Perfetto-loadable fabric trace.
+
+Runs the seeded 16-node serving trace replay (the same workload as
+``benchmarks/trace_replay.py``'s smoke lane) with a ``Telemetry`` hub
+attached, writes the event timeline as Chrome-trace JSON — loadable at
+``ui.perfetto.dev`` or ``chrome://tracing`` — and prints the counter
+summary table.  Fully deterministic: the same ``--seed`` produces a
+byte-identical ``.trace.json``.
+
+    python scripts/fabric_trace.py --out fabric.trace.json
+    python scripts/fabric_trace.py --nodes 16 --requests 240 --seed 11
+    python scripts/fabric_trace.py --validate fabric.trace.json
+
+``--validate FILE`` skips the replay and schema-checks an existing
+trace file instead (the nightly CI lane validates its own export).
+Exit 0 on success, 1 on schema violations or a failed export.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, REPO)
+
+DIMS_BY_NODES = {16: (4, 4), 64: (4, 4, 4), 512: (8, 8, 8)}
+
+
+def export(out_path: str, *, nodes: int, requests: int, seed: int,
+           fidelity: str) -> int:
+    from repro.core import fabric
+    from benchmarks.trace_replay import _cluster, _trace
+    from repro.serving.trace import replay
+
+    dims = DIMS_BY_NODES.get(nodes)
+    if dims is None:
+        print(f"unsupported --nodes {nodes}; known: "
+              f"{sorted(DIMS_BY_NODES)}", file=sys.stderr)
+        return 1
+    tel = fabric.Telemetry()
+    cl = _cluster(dims, fidelity=fidelity, queue_limit=48)
+    cl.telemetry = tel
+    cl.sim.telemetry = tel
+    for node in cl.nodes.values():
+        node.lm.endpoint.telemetry = tel
+    tr = _trace(requests, nodes, 0.92, seed)
+    report = replay(cl, tr, rebalance="proactive")
+    blob = tel.to_perfetto()
+    errs = fabric.validate_perfetto(json.loads(blob))
+    if errs:
+        for e in errs:
+            print(f"schema: {e}", file=sys.stderr)
+        return 1
+    with open(out_path, "w") as f:
+        f.write(blob)
+    print(f"wrote {out_path}: {len(blob)} bytes, "
+          f"{tel.n_events} events ({tel.dropped} dropped)")
+    print(f"replay: {report.n_finished}/{report.n_requests} finished, "
+          f"tpt p99 {report.tpt_p99_s * 1e3:.2f} ms, "
+          f"makespan {report.makespan_s:.2f} s")
+    print()
+    print(tel.summary_table())
+    return 0
+
+
+def validate(path: str) -> int:
+    from repro.core import fabric
+    try:
+        with open(path) as f:
+            obj = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: unreadable trace ({e})", file=sys.stderr)
+        return 1
+    errs = fabric.validate_perfetto(obj)
+    if errs:
+        for e in errs:
+            print(f"{path}: {e}", file=sys.stderr)
+        return 1
+    n = len(obj.get("traceEvents", []))
+    print(f"{path}: valid Chrome-trace JSON, {n} trace events")
+    return 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--out", default="fabric.trace.json",
+                   help="output trace path (default fabric.trace.json)")
+    p.add_argument("--nodes", type=int, default=16,
+                   help="cluster size: 16, 64 or 512 (default 16)")
+    p.add_argument("--requests", type=int, default=240,
+                   help="trace length (default 240)")
+    p.add_argument("--seed", type=int, default=11,
+                   help="trace seed (default 11, the smoke-lane seed)")
+    p.add_argument("--fidelity", default="fluid",
+                   choices=("packet", "fluid", "hybrid"))
+    p.add_argument("--validate", metavar="FILE", default=None,
+                   help="schema-check an existing trace file and exit")
+    args = p.parse_args(argv)
+    if args.validate is not None:
+        return validate(args.validate)
+    return export(args.out, nodes=args.nodes, requests=args.requests,
+                  seed=args.seed, fidelity=args.fidelity)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -56,6 +56,9 @@ from repro.core.fabric.sim import (FabricSim, FlowResult, best_route,
                                    candidate_routes, clear_route_cache,
                                    inject_schedule, simulate_schedule,
                                    stripe_counts, striped_routes)
+from repro.core.fabric.telemetry import (Telemetry, canon_key,
+                                         ordered_link_items,
+                                         validate_perfetto)
 # autotune references this package lazily (``from repro.core import
 # fabric``), so it must come after every name it may resolve at call time
 from repro.core.fabric.autotune import (AGENTS, ConfigSpace, FabricConfig,
@@ -85,6 +88,7 @@ __all__ = [
     "clear_route_cache", "inject_schedule", "simulate_schedule",
     "stripe_counts", "striped_routes",
     "FIDELITIES", "FluidSim", "HybridSim", "make_sim",
+    "Telemetry", "canon_key", "ordered_link_items", "validate_perfetto",
     "DEFAULT_CREDIT_FRAC", "DEFAULT_WEIGHTS", "SINGLE_CLASS", "QosPolicy",
     "QosController", "QosCtlPolicy", "TrafficClass",
     "AGENTS", "ConfigSpace", "FabricConfig", "FabricEnv", "GeneticAgent",

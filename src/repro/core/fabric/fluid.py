@@ -67,6 +67,7 @@ from repro.core.fabric.schedule import FaultMap
 from repro.core.fabric.sim import (
     DEFAULT_MAX_PACKETS, DEFAULT_PACKET_BYTES, FabricSim, FlowResult,
     _cached_bfs, link_key, packetize)
+from repro.core.fabric.telemetry import ordered_link_items
 from repro.core.topology import Torus
 
 FIDELITIES = ("packet", "fluid", "hybrid")
@@ -163,7 +164,8 @@ class FluidSim:
                  solver: str = "np",
                  exact_below: int = 64,
                  resolve_frac: float = 0.05,
-                 coalesce_s: float = 0.0) -> None:
+                 coalesce_s: float = 0.0,
+                 telemetry: "object | None" = None) -> None:
         if packet_bytes <= 0:
             raise ValueError(f"packet_bytes must be > 0, got {packet_bytes}")
         if solver not in ("np", "jnp"):
@@ -201,6 +203,10 @@ class FluidSim:
         self._stats: dict = {}    # link key -> [busy_s, bytes, class_bytes[]]
         self._res_free: dict = {} # resource key -> FIFO free-at time
         self._probing = False
+        # optional Telemetry hub — every hook gated on
+        # ``telemetry is not None and not self._probing`` (None is
+        # bitwise-invisible; probe ghosts never reach the hub)
+        self.telemetry = telemetry
         self.n_solves = 0         # solver invocations (reporting)
         self.n_warm_solves = 0    # solves that reused cached incidence
         # warm-start cache: the flat incidence arrays ``_rates_np`` builds
@@ -354,6 +360,9 @@ class FluidSim:
             end = beg + (f.service_s or 0.0)
             self._res_free[f.resource] = end
             self._stat(f.resource)[0] += f.service_s or 0.0
+            if self.telemetry is not None and not self._probing:
+                self.telemetry.on_resource_busy(
+                    f.resource, f.service_s or 0.0, int(f.cls))
             if end > t:
                 self._push(end, "complete", f.fid)
             else:
@@ -387,6 +396,11 @@ class FluidSim:
             st[0] += busy
             st[1] += f.nbytes
             st[2][int(f.cls)] += f.nbytes
+        if self.telemetry is not None and not self._probing:
+            # mirrors the per-key loop above in the same order, so the
+            # hub's counters cross-check exactly against _stats
+            self.telemetry.on_flow_drain(f.link_keys, int(f.cls),
+                                         f.nbytes, busy)
         fin = t + f.tail_s + f.dst_over
         if fin > t:
             self._push(fin, "complete", f.fid)
@@ -402,6 +416,17 @@ class FluidSim:
     def _finish(self, f: _FFlow, t: float) -> None:
         f.finish_s = t
         self._frontier = max(self._frontier, t)
+        tel = self.telemetry
+        if tel is not None and not self._probing:
+            start = f.start_s if f.start_s is not None else f.req_start
+            if f.resource is not None:
+                track = ("node", f.resource)
+            elif f.link_keys:
+                track = ("link", f.link_keys[0])
+            else:
+                track = ("node", f.route[0] if f.route else -1)
+            tel.flow_span(track, f.label or f"flow{f.fid}", start, t,
+                          cls=int(f.cls), nbytes=f.nbytes, fid=f.fid)
         for dep_fid in f.dependents:
             dep = self._flows[dep_fid]
             dep.pending -= 1
@@ -627,7 +652,7 @@ class FluidSim:
         the ``FabricSim.link_stats`` shape, accounted at flow drains."""
         return {k: {"busy_s": v[0], "bytes": v[1],
                     "class_bytes": tuple(v[2])}
-                for k, v in self._stats.items()}
+                for k, v in ordered_link_items(self._stats.items())}
 
     def class_stats(self, since: dict | None = None
                     ) -> dict[TrafficClass, float]:
@@ -667,6 +692,8 @@ class FluidSim:
         self._class_credits = policy.partition_credits(self.credit_bytes)
         if self._active:
             self._solve(max(self._frontier, self._solve_t))
+        if self.telemetry is not None:
+            self.telemetry.add("fabric.qos_retunes")
 
     # -- mid-flight re-striping ------------------------------------------------
     def unsent_bytes(self, fid: int) -> float:
@@ -739,6 +766,10 @@ class FluidSim:
         if f.fid in self._active:
             self._dirty = True
             self._solve(max(self._frontier, self._solve_t))
+        if self.telemetry is not None:
+            self.telemetry.add("fabric.restripes")
+            self.telemetry.add("fabric.restripe_siblings",
+                               float(len(out) - 1))
         return out
 
     def prune(self) -> int:
@@ -825,6 +856,10 @@ class FluidSim:
         self.last_probe_report = {
             "flows_touched": len(snap[0]), "links_touched": len(route) - 1,
         }
+        if self.telemetry is not None and not self._probing:
+            # once per TOP-LEVEL probe, after restore — the one counter
+            # a probe moves (nested probes stay fully suppressed)
+            self.telemetry.add("fabric.probes")
         return out
 
 
@@ -941,6 +976,19 @@ class HybridSim(FluidSim):
             "hot_links": len(hot), "escalated_flows": len(esc),
             "batch_flows": len(batch),
         }
+        if self.telemetry is not None:
+            # the sub-sim runs WITHOUT the hub: its link traffic is the
+            # same payload the fluid pass already accounted (only the
+            # timing is refined), so reporting both would double-count.
+            # Escalated flows' spans keep their fluid finishes (stitching
+            # rewrites finish_s post-hoc); the escalation itself is one
+            # instant event plus counters.
+            self.telemetry.add("fabric.escalations")
+            self.telemetry.add("fabric.escalated_flows", float(len(esc)))
+            self.telemetry.event(
+                ("hybrid",), "escalation", self._frontier,
+                hot_links=len(hot), escalated=len(esc),
+                batch=len(batch))
         return self._frontier
 
 

@@ -108,7 +108,8 @@ class QosController:
     """
 
     def __init__(self, base: QosPolicy, slo, *,
-                 policy: QosCtlPolicy | None = None) -> None:
+                 policy: QosCtlPolicy | None = None,
+                 telemetry: "object | None" = None) -> None:
         if base.single_class:
             raise ValueError("closed-loop QoS needs a multi-class baseline "
                              "(single_class has no DECODE channel to boost)")
@@ -121,6 +122,10 @@ class QosController:
         self._applied = 1.0        # boost the sim currently runs
         self._last_stats: dict | None = None
         self.history: list[tuple[str, float | None, float]] = []
+        # optional Telemetry hub: one controller-track event per window
+        # plus window/retune counters.  Pure reporting — None changes
+        # nothing about the control law or its timeline.
+        self.telemetry = telemetry
 
     # -- control step ---------------------------------------------------------
     def window(self, sim, tpt_samples) -> bool:
@@ -161,11 +166,21 @@ class QosController:
             new_boost = max(self.boost * pol.decay, pol.floor)
         self.history.append((band, p99, new_boost))
         self.boost = new_boost
+        tel = self.telemetry
+        if tel is not None:
+            tel.add("qosctl.windows")
+            tel.event(("controller",), band, float(sim.now),
+                      p99_ms=-1.0 if p99 is None else p99 * 1e3,
+                      boost=new_boost)
         if not self.engaged or abs(new_boost - self._applied) <= 1e-12:
             return False
         sim.set_qos(self.retuned())
         self._applied = new_boost
         self.n_retunes += 1
+        if tel is not None:
+            tel.add("qosctl.retunes")
+            tel.event(("controller",), "retune", float(sim.now),
+                      boost=new_boost)
         return True
 
     # -- policy lowering ------------------------------------------------------

@@ -66,6 +66,7 @@ from repro.core.fabric.lower import UnroutableError, _bfs_path, _lanes
 from repro.core.fabric.qos import SINGLE_CLASS, QosPolicy, TrafficClass
 from repro.core.fabric.schedule import (
     P2P, CollectiveSchedule, FaultMap, Phase, Transfer)
+from repro.core.fabric.telemetry import ordered_link_items
 from repro.core.topology import Torus
 
 # flows bigger than max_packets * packet_bytes coarsen their packets so the
@@ -139,6 +140,14 @@ _bfs_cache: dict = {}
 _candidates_cache: dict = {}
 _MISS = object()
 
+# Cumulative hit/miss tallies for the module-level route caches.  The
+# caches are free functions shared by every sim, so their stats live
+# here; a ``Telemetry`` hub copies them in as gauges on an explicit
+# ``collect()`` — never on the hot path, so probe-invariance tests stay
+# clean.  Plain int increments: invisible to any replay metric.
+ROUTE_CACHE_STATS = {"bfs_hits": 0, "bfs_misses": 0,
+                     "cand_hits": 0, "cand_misses": 0}
+
 
 def clear_route_cache() -> None:
     """Invalidate the per-fault-epoch route caches (BFS paths and
@@ -154,9 +163,12 @@ def _cached_bfs(torus: Torus, src: int, dst: int,
     key = (torus.dims, src, dst, faults)
     hit = _bfs_cache.get(key, _MISS)
     if hit is _MISS:
+        ROUTE_CACHE_STATS["bfs_misses"] += 1
         if len(_bfs_cache) >= _ROUTE_CACHE_CAP:
             _bfs_cache.clear()
         hit = _bfs_cache[key] = _bfs_path(torus, src, dst, faults)
+    else:
+        ROUTE_CACHE_STATS["bfs_hits"] += 1
     return hit
 
 
@@ -304,7 +316,8 @@ class FabricSim:
                  credit_bytes: float | None = None,
                  max_packets_per_flow: int = DEFAULT_MAX_PACKETS,
                  faults: FaultMap | None = None,
-                 qos: QosPolicy | None = None) -> None:
+                 qos: QosPolicy | None = None,
+                 telemetry: "object | None" = None) -> None:
         if packet_bytes <= 0:
             raise ValueError(f"packet_bytes must be > 0, got {packet_bytes}")
         self.torus = torus
@@ -331,6 +344,12 @@ class FabricSim:
         self._journal: _Journal | None = None   # active probe journal
         self.last_probe_report: dict | None = None
         self.deadlock_breaks = 0   # escape-credit recoveries (see _unstick)
+        # optional Telemetry hub.  Every hook is gated on
+        # ``telemetry is not None and self._journal is None``: None is
+        # bitwise-invisible, and probe ghosts never reach the hub.  All
+        # derived telemetry state lives hub-side, so attaching one
+        # changes NOTHING about sim state, snapshots, or rollbacks.
+        self.telemetry = telemetry
 
     # -- clock ----------------------------------------------------------------
     @property
@@ -554,6 +573,9 @@ class FabricSim:
                 return
             c = self._pick(link)
             if c is None:
+                tel = self.telemetry
+                if tel is not None and self._journal is None:
+                    tel.on_credit_block(key, now)
                 return   # all backlogged channels credit-blocked
             pkt: _Pkt = link.queues[c].pop(0)
             flow = self._flows[pkt.fid]
@@ -573,6 +595,12 @@ class FabricSim:
             link.busy_s += dur
             link.bytes_carried += pkt.nbytes
             link.class_bytes[int(flow.cls)] += pkt.nbytes
+            tel = self.telemetry
+            if tel is not None and self._journal is None:
+                # mirrors the three += above in the same order, so the
+                # hub's per-key counters cross-check EXACTLY
+                tel.on_link_tx(key, int(flow.cls), pkt.nbytes, dur,
+                               start, is_resource)
             if pkt.prev is not None:
                 # the packet left the upstream buffer: credit flows back
                 up = self._link(pkt.prev)
@@ -609,6 +637,21 @@ class FabricSim:
         self._j_flow(flow)
         flow.finish_s = t
         self._frontier = max(self._frontier, t)
+        tel = self.telemetry
+        if tel is not None and self._journal is None:
+            start = flow.start_s if flow.start_s is not None \
+                else flow.req_start
+            if flow.resource is not None:
+                track = ("node", flow.resource)
+            elif len(flow.route) >= 2:
+                track = ("link", self._link_key(flow.route[0],
+                                                flow.route[1],
+                                                flow.channel))
+            else:
+                track = ("node", flow.route[0] if flow.route else -1)
+            tel.flow_span(track, flow.label or f"flow{flow.fid}",
+                          start, t, cls=int(flow.cls),
+                          nbytes=flow.nbytes, fid=flow.fid)
         for dep_fid in flow.dependents:
             dep = self._flows[dep_fid]
             self._j_flow(dep)
@@ -732,6 +775,8 @@ class FabricSim:
         need = link.queues[c][0].nbytes - link.credits[c]
         link.credits[c] += need          # loan the escape credit
         self.deadlock_breaks += 1
+        if self.telemetry is not None and self._journal is None:
+            self.telemetry.on_escape_loan(key, c, need)
         self._try_start(key, self._frontier)
         link.credits[c] -= need          # balance now negative: the loan
         return True                      # is repaid on the credit return
@@ -763,7 +808,7 @@ class FabricSim:
         ``single_class`` arbitration (where all tags share one channel)."""
         return {k: {"busy_s": v.busy_s, "bytes": v.bytes_carried,
                     "class_bytes": tuple(v.class_bytes)}
-                for k, v in self._links.items()}
+                for k, v in ordered_link_items(self._links.items())}
 
     def class_stats(self, since: dict | None = None
                     ) -> dict[TrafficClass, float]:
@@ -816,6 +861,8 @@ class FabricSim:
         for key, link in self._links.items():
             if any(link.queues):
                 self._try_start(key, self._frontier)
+        if self.telemetry is not None:
+            self.telemetry.add("fabric.qos_retunes")
 
     # -- mid-flight re-striping ------------------------------------------------
     def unsent_bytes(self, fid: int) -> float:
@@ -885,6 +932,10 @@ class FabricSim:
             nf.dst_over = f.dst_over       # leg it split from (GPU touch,
             nf.pace_s = f.pace_s           # outbound read pacing)
             out.append(nfid)
+        if self.telemetry is not None:
+            self.telemetry.add("fabric.restripes")
+            self.telemetry.add("fabric.restripe_siblings",
+                               float(len(out) - 1))
         return out
 
     def prune(self) -> int:
@@ -1058,6 +1109,12 @@ class FabricSim:
             "links_total": len(self._links),
             "flows_total": len(self._flows),
         }
+        if self.telemetry is not None:
+            # stamped AFTER rollback, once per top-level probe (nested
+            # probes are fully suppressed under the outer journal) —
+            # the ONE counter a probe moves, by design; everything else
+            # must match a never-probed control bitwise
+            self.telemetry.add("fabric.probes")
         return out
 
 
@@ -1201,10 +1258,13 @@ def candidate_routes(torus: Torus, src: int, dst: int,
     key = (torus.dims, src, dst, faults)
     hit = _candidates_cache.get(key, _MISS)
     if hit is _MISS:
+        ROUTE_CACHE_STATS["cand_misses"] += 1
         if len(_candidates_cache) >= _ROUTE_CACHE_CAP:
             _candidates_cache.clear()
         hit = _candidates_cache[key] = _candidate_routes_uncached(
             torus, src, dst, faults)
+    else:
+        ROUTE_CACHE_STATS["cand_hits"] += 1
     return list(hit)
 
 

@@ -94,7 +94,8 @@ class RdmaEndpoint:
                  engines: int = 2, cq_slots: int | None = None,
                  net: apelink.NetModel | None = None,
                  sim: "object | None" = None,
-                 descriptor_bytes: float | None = None) -> None:
+                 descriptor_bytes: float | None = None,
+                 telemetry: "object | None" = None) -> None:
         self.torus = torus
         self.rank = rank
         self.engines = engines
@@ -121,6 +122,10 @@ class RdmaEndpoint:
         # None = closed-form.
         self.sim = sim
         self.last_put_report: dict | None = None
+        # optional Telemetry hub (the card's "hardware counters"): PUT /
+        # GET / descriptor tallies + one span per PUT on this rank's
+        # track.  Reporting only — None is bitwise-invisible.
+        self.telemetry = telemetry
         # prefetchable command queue (§2.1): in-flight descriptor slots.
         # Two per engine by default — one draining, one prefetched — which
         # is what lets the second engine start without waiting for the
@@ -312,6 +317,10 @@ class RdmaEndpoint:
                                     "translate_s": t_src + t_dst,
                                     "stripes": len(legs),
                                     "settle_s": t_settle}
+            if self.telemetry is not None:
+                self.telemetry.add("rdma.puts")
+                self.telemetry.add("rdma.put_bytes", float(nbytes))
+                self.telemetry.add("rdma.descriptors")
             return isolated
         # shared timeline: the DMA drain occupies this card's host-IF slot,
         # then the payload walks its route(s) packet by packet — all legs
@@ -375,6 +384,15 @@ class RdmaEndpoint:
                                 "settle_s": t_settle,
                                 "descriptors": n_desc,
                                 "restriped": restriped}
+        tel = self.telemetry
+        if tel is not None:
+            tel.add("rdma.puts")
+            tel.add("rdma.put_bytes", float(nbytes))
+            tel.add("rdma.descriptors", float(n_desc))
+            tel.add("rdma.restriped", float(restriped))
+            tel.event(("rdma", self.rank), f"put->{dst}", start, total,
+                      nbytes=float(nbytes), stripes=len(legs),
+                      descriptors=n_desc, restriped=restriped)
         return total
 
     def get_time(self, src: int, nbytes: int, region: Region, *,
@@ -391,6 +409,9 @@ class RdmaEndpoint:
         host-IF occupancy -> payload flow) instead of closed-form terms.
         """
         from repro.core import fabric
+        if self.telemetry is not None:
+            self.telemetry.add("rdma.gets")
+            self.telemetry.add("rdma.get_bytes", float(nbytes))
         t_local = self.translate_region(region)
         req = fabric.lower_p2p(self.torus, self.rank, src, faults=faults)
         back = fabric.lower_p2p(self.torus, src, self.rank, faults=faults)

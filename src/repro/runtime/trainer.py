@@ -110,10 +110,14 @@ class TrainerConfig:
 
 class Trainer:
     def __init__(self, cfg: ArchCfg, tcfg: TrainerConfig,
-                 mesh: Mesh | None = None) -> None:
+                 mesh: Mesh | None = None,
+                 telemetry: "object | None" = None) -> None:
         self.cfg = cfg
         self.tcfg = tcfg
         self.mesh = mesh
+        # optional fabric Telemetry hub: step spans, fault-epoch events
+        # and the RDMA twin's counters (None = zero telemetry code runs)
+        self.telemetry = telemetry
         self.model = api.get_model(cfg)
         self.store = CheckpointStore(tcfg.ckpt_dir, keep_last=tcfg.keep_last)
         self.data = SyntheticTokens(cfg, tcfg.batch, tcfg.seq_len,
@@ -132,7 +136,7 @@ class Trainer:
         self.lofamo = LofamoSim(self.torus, wd_period=tcfg.wd_period)
         # RDMA endpoint twin: its command-queue depth feeds the overlap
         # model (prefetchable queue = issue gaps hidden between buckets)
-        self.rdma = RdmaEndpoint(self.torus, rank=0)
+        self.rdma = RdmaEndpoint(self.torus, rank=0, telemetry=telemetry)
         self._handled_faults: set[int] = set()
         self._handled_links: set[tuple[int, int]] = set()
         self._fault_map = fabric.FaultMap()
@@ -498,6 +502,15 @@ class Trainer:
                     f"straggler step={self.data.step} {dt:.3f}s vs median "
                     f"{med:.3f}s — would re-issue on hot spare")
         self.metrics_log.append(metrics)
+        if self.telemetry is not None:
+            self.telemetry.add("trainer.steps")
+            self.telemetry.add("trainer.step_time_s", dt)
+            # trainer spans ride a logical clock (cumulative step time):
+            # the trainer has no fabric sim frontier to stamp against
+            self.telemetry.event(
+                ("trainer",), f"step{self.data.step}",
+                sum(self._step_times[:-1]), dt,
+                loss=metrics.get("loss", 0.0), step=self.data.step)
         return metrics
 
     def checkpoint(self) -> None:
@@ -540,6 +553,11 @@ class Trainer:
         higher predicted hop cost; otherwise we just log the awareness."""
         self.events.append(
             f"LO|FA|MO: master aware of dead link(s) {sorted(links)}")
+        if self.telemetry is not None:
+            self.telemetry.add("fabric.fault_epochs")
+            self.telemetry.event(
+                ("trainer",), "link_fault", sum(self._step_times),
+                links=sorted(links))
         if self.tcfg.fault_mode != "reroute" or self.tcfg.comm != "apex" \
                 or self.mesh is None:
             return

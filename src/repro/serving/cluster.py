@@ -174,7 +174,8 @@ class ServingCluster:
                  n_params: int | float | None = None,
                  descriptor_bytes: float | None = None,
                  restripe_s: float | None = None,
-                 slo: SloPolicy | None = None) -> None:
+                 slo: SloPolicy | None = None,
+                 telemetry: "object | None" = None) -> None:
         self.cfg = cfg
         self.torus = torus
         # ``modelled=True`` builds accounting-only replicas (no K/V
@@ -211,6 +212,14 @@ class ServingCluster:
         sim_kw = dict(sim_kw or {})
         if qos is not None:
             sim_kw.setdefault("qos", qos)
+        # ONE optional Telemetry hub for the whole cluster: the shared
+        # sim reports per-link counters/flow spans into it, every node's
+        # RDMA endpoint reports PUT spans, and the cluster itself stamps
+        # admission/shed/migration/fault-epoch events.  None (default)
+        # is bitwise-invisible end to end.
+        self.telemetry = telemetry
+        if telemetry is not None:
+            sim_kw.setdefault("telemetry", telemetry)
         self.sim = fabric.make_sim(torus, self.net, fidelity=fidelity,
                                    **sim_kw)
         self.nodes: dict[int, ClusterNode] = {}
@@ -220,6 +229,8 @@ class ServingCluster:
                          torus=torus, tp_axes=tp_axes, rank=r,
                          sim=self.sim, net=self.net, modelled=modelled,
                          descriptor_bytes=descriptor_bytes)
+            if telemetry is not None:
+                lm.endpoint.telemetry = telemetry
             self.nodes[r] = ClusterNode(
                 r, lm, Engine(lm, chunked_prefill=chunked_prefill))
         self.page_tokens = page_tokens
@@ -261,6 +272,12 @@ class ServingCluster:
         fabric.clear_route_cache()
         for node in self.nodes.values():
             node.lm.relower_tp(self.faults)
+        if self.telemetry is not None:
+            # exactly one fault-epoch stamp per fail_link call — the
+            # sims themselves have no fault mutators, this is THE site
+            self.telemetry.add("fabric.fault_epochs")
+            self.telemetry.event(("cluster",), "fail_link",
+                                 float(self.sim.now), a=a, b=b)
 
     def clear_faults(self) -> None:
         self.faults = fabric.FaultMap()
@@ -268,6 +285,10 @@ class ServingCluster:
         fabric.clear_route_cache()
         for node in self.nodes.values():
             node.lm.relower_tp(self.faults)
+        if self.telemetry is not None:
+            self.telemetry.add("fabric.fault_epochs")
+            self.telemetry.event(("cluster",), "clear_faults",
+                                 float(self.sim.now))
 
     # -- router -----------------------------------------------------------------
     @property
@@ -330,6 +351,8 @@ class ServingCluster:
             if len(self.admission_queue) >= self.slo.queue_limit:
                 req.shed_s = self.sim.now
                 self.shed.append(req)
+                if self.telemetry is not None:
+                    self.telemetry.add("cluster.sheds")
             else:
                 self.admission_queue.append(req)
             return None
@@ -337,6 +360,10 @@ class ServingCluster:
             req.warm_tokens = 0   # prefix cache is home-node-local
         node.engine.submit(req)
         req.admit_s = self.sim.now
+        if self.telemetry is not None:
+            self.telemetry.add("cluster.admitted")
+            self.telemetry.add("cluster.queue_wait_s",
+                               req.admit_s - (req.arrival_s or 0.0))
         return node.rank
 
     def _drain_admission(self) -> int:
@@ -355,6 +382,8 @@ class ServingCluster:
             if now - (req.arrival_s or 0.0) > self.slo.max_queue_wait_s:
                 req.shed_s = now
                 self.shed.append(req)
+                if self.telemetry is not None:
+                    self.telemetry.add("cluster.sheds")
                 continue
             fits = [n for n in self.nodes.values()
                     if self._can_host(n, req)]
@@ -364,6 +393,10 @@ class ServingCluster:
                 node.engine.submit(req)
                 req.admit_s = now
                 placed += 1
+                if self.telemetry is not None:
+                    self.telemetry.add("cluster.admitted")
+                    self.telemetry.add("cluster.queue_wait_s",
+                                       now - (req.arrival_s or 0.0))
             else:
                 keep.append(req)
         self.admission_queue = keep
@@ -552,6 +585,14 @@ class ServingCluster:
             route_policy=route_policy,
             stripes=put.get("stripes", 1))
         self.migrations.append(report)
+        if self.telemetry is not None:
+            self.telemetry.add("cluster.migrations")
+            self.telemetry.add("cluster.migrated_bytes",
+                               float(report.nbytes))
+            self.telemetry.event(
+                ("cluster",), "migrate", float(self.sim.now),
+                rid=rid, src=report.src, dst=report.dst,
+                n_pages=report.n_pages, stripes=report.stripes)
         return report
 
     def _stripe_pages(self, plan, n_pages: int) -> list[tuple]:

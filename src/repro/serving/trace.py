@@ -189,7 +189,10 @@ class ReplayReport:
         return self.n_shed / self.n_requests if self.n_requests else 0.0
 
     def metrics(self) -> dict[str, float]:
-        return {
+        # sorted-key ordering: deterministic independent of the literal's
+        # (or any future caller's) insertion history, so snapshot diffs
+        # and cross-tier comparisons never see a reordered dict
+        return dict(sorted({
             "n_finished": float(self.n_finished),
             "shed_rate": float(self.shed_rate),
             "ttft_p50_s": float(self.ttft_p50_s),
@@ -200,7 +203,7 @@ class ReplayReport:
             "steps": float(self.steps),
             "n_migrations": float(self.n_migrations),
             "migrated_bytes": float(self.migrated_bytes),
-        }
+        }.items()))
 
 
 def _pct(vals: list[float], q: float) -> float:
@@ -213,7 +216,8 @@ def replay(cluster: ServingCluster, trace: list[TraceRequest], *,
            rebalance_every_s: float | None = None,
            session_affinity: bool = True,
            qos_ctl=None, background=None,
-           max_steps: int = 2_000_000) -> ReplayReport:
+           max_steps: int = 2_000_000,
+           telemetry=None) -> ReplayReport:
     """Drive ``cluster`` through ``trace``, event-driven per node.
 
     Every node runs its own decode cadence: a per-node frontier
@@ -257,6 +261,11 @@ def replay(cluster: ServingCluster, trace: list[TraceRequest], *,
     """
     if rebalance not in ("proactive", "reactive", "none"):
         raise ValueError(f"unknown rebalance mode {rebalance!r}")
+    # the cluster's hub is the default reporting target; an explicit
+    # ``telemetry=`` overrides (None + no cluster hub = zero telemetry
+    # code on the replay path — bitwise-invisible)
+    tel = telemetry if telemetry is not None \
+        else getattr(cluster, "telemetry", None)
     t0 = time.perf_counter()
     t_tok = cluster.t_token_s
     reqs = [Request(rid=tr.rid,
@@ -360,6 +369,10 @@ def replay(cluster: ServingCluster, trace: list[TraceRequest], *,
                 moves = [] if m is None else [m]
             else:
                 moves = []
+            if tel is not None:
+                tel.add("replay.hooks")
+                if moves:
+                    tel.add("replay.rebalance_moves", float(len(moves)))
             for m in moves:
                 # the destination resumes no earlier than the PUT's
                 # contention-priced completion: the pages must land
@@ -370,12 +383,18 @@ def replay(cluster: ServingCluster, trace: list[TraceRequest], *,
                 # one straggler's window; the bounded stamp skew is
                 # clamped per-request at stamping time instead.)
                 busy[m.dst] = max(busy[m.dst], t + m.modelled_s)
+                if tel is not None:
+                    tel.event(("cluster",), "rebalance", t,
+                              rid=m.rid, src=m.src, dst=m.dst,
+                              nbytes=float(m.nbytes))
             # the shared timeline outlives every window: drop settled
             # flows so probe snapshots stay O(in-flight), not O(uptime)
             cluster.sim.prune()
         if steps >= max_steps:
             raise TruncatedRunError(steps, cluster.in_flight)
     cluster.settle()
+    if tel is not None:
+        tel.collect(cluster.sim)   # route-cache gauges + final clock
 
     finished = cluster.finished
     ttfts = [r.first_token_s - r.arrival_s for r in finished

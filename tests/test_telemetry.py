@@ -1,0 +1,338 @@
+"""Unified fabric telemetry: counter registry determinism, Perfetto
+export schema + seeded byte-identity, disabled-mode invisibility, the
+counter-vs-``link_stats`` exact cross-check on both fidelity tiers,
+cross-tier stats-schema parity, hybrid windowed-delta identity, and the
+probe/snapshot ghost discipline (a probe moves ONE counter —
+``fabric.probes`` — and nothing else).
+"""
+import json
+
+import pytest
+
+import jax
+
+from repro import configs
+from repro.core import fabric
+from repro.core.fabric.fluid import FluidSim, HybridSim, make_sim
+from repro.core.fabric.qos import QosPolicy, TrafficClass
+from repro.core.fabric.sim import FabricSim
+from repro.core.fabric.telemetry import (Telemetry, canon_key,
+                                         ordered_link_items,
+                                         validate_perfetto)
+from repro.core.rdma import RdmaEndpoint
+from repro.core.topology import Torus
+from repro.models import api
+from repro.serving.cluster import ServingCluster
+
+D = TrafficClass.DECODE
+B = TrafficClass.BULK
+
+FLOWS = [(0, 3, 1 << 20), (1, 4, 1 << 19), (5, 7, 1 << 18)]
+
+
+def _drive(sim, tel=None):
+    if tel is not None:
+        sim.telemetry = tel
+    fids = [sim.inject(s, d, nb, cls=B, label=f"f{i}")
+            for i, (s, d, nb) in enumerate(FLOWS)]
+    fids.append(sim.inject(2, 6, 1 << 19, cls=D, label="dec"))
+    sim.occupy(("hostif", 0), 2e-4, cls=D)
+    sim.run()
+    return fids
+
+
+# ---------------------------------------------------------------------------
+# counter registry
+# ---------------------------------------------------------------------------
+
+def test_counter_registry_deterministic_snapshot():
+    a, b = Telemetry(), Telemetry()
+    # same adds, different arrival order -> identical snapshot
+    seq = [("link.bytes", 10.0, (0, 1, "+x"), 1),
+           ("link.bytes", 4.0, (0, 1, "+x"), None),
+           ("fabric.probes", 1.0, None, None),
+           ("link.busy_s", 0.5, ("hostif", 3), None)]
+    for name, v, key, cls in seq:
+        a.add(name, v, key=key, cls=cls)
+    for name, v, key, cls in reversed(seq):
+        b.add(name, v, key=key, cls=cls)
+    assert a.counters_snapshot() == b.counters_snapshot()
+    assert list(a.counters_snapshot()) == list(b.counters_snapshot())
+    assert a.value("link.bytes", key=(0, 1, "+x")) == 4.0
+    assert a.value("link.bytes", key=(0, 1, "+x"), cls=1) == 10.0
+    assert a.value("nope") == 0.0
+
+
+def test_canon_key_total_order_over_mixed_keys():
+    keys = [("hostif", 3), (0, 1, "+x"), None, (2, 0, "-y"), "plain", 7]
+    ordered = sorted(keys, key=canon_key)
+    assert ordered == sorted(ordered, key=canon_key)   # stable/total
+    assert ordered[0] is None                          # None sorts first
+    # tuples sort after scalars, and among themselves element-wise
+    tuples = [k for k in ordered if isinstance(k, tuple)]
+    assert tuples == [(0, 1, "+x"), (2, 0, "-y"), ("hostif", 3)]
+
+
+def test_event_ring_is_bounded():
+    tel = Telemetry(ring=8)
+    for i in range(20):
+        tel.event(("link", (0, 1, "+x")), f"e{i}", float(i))
+    assert tel.n_events == 20
+    assert len(tel.events_snapshot()) == 8
+    assert tel.dropped == 12
+
+
+# ---------------------------------------------------------------------------
+# disabled-mode invisibility + exact cross-check (both tiers)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fidelity", ["packet", "fluid"])
+def test_attached_hub_is_bitwise_invisible(fidelity):
+    torus = Torus((8,))
+    bare = make_sim(torus, fidelity=fidelity, qos=QosPolicy())
+    inst = make_sim(torus, fidelity=fidelity, qos=QosPolicy())
+    fb = _drive(bare)
+    fi = _drive(inst, Telemetry())
+    for x, y in zip(fb, fi):
+        assert bare.finish_s(x) == inst.finish_s(y)
+    assert bare.link_stats() == inst.link_stats()
+    assert bare.class_stats() == inst.class_stats()
+
+
+@pytest.mark.parametrize("fidelity", ["packet", "fluid"])
+def test_counters_cross_check_exactly_zero(fidelity):
+    torus = Torus((8,))
+    tel = Telemetry()
+    sim = make_sim(torus, fidelity=fidelity, qos=QosPolicy())
+    _drive(sim, tel)
+    assert tel.cross_check(sim) == 0.0
+    # and the hub actually saw traffic — this is not a vacuous zero
+    assert any(n == "link.bytes" for (n, *_rest) in tel.counters)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: unified link_stats schema + deterministic metrics()
+# ---------------------------------------------------------------------------
+
+def test_link_stats_schema_parity_across_tiers():
+    torus = Torus((4, 4))
+    pkt = make_sim(torus, fidelity="packet")
+    flu = make_sim(torus, fidelity="fluid")
+    for s in (pkt, flu):
+        for i in range(8):
+            s.inject(i, (i + 5) % 16, 1 << 20, cls=B)
+            s.occupy(("hostif", i), 1e-4, cls=B)
+        s.run()
+    sp, sf = pkt.link_stats(), flu.link_stats()
+    assert list(sp.keys()) == list(sf.keys())          # same canonical order
+    for st in (sp, sf):
+        for v in st.values():
+            assert tuple(v.keys()) == ("busy_s", "bytes", "class_bytes")
+    # ordering is the canon_key order, not insertion order
+    assert list(sp.keys()) == [k for k, _v in
+                               ordered_link_items(sp.items())]
+
+
+def test_replay_metrics_ordering_is_sorted():
+    from repro.serving.trace import ReplayReport
+    rep = ReplayReport(n_requests=1, n_finished=1, n_shed=0,
+                       ttft_p50_s=0.1, ttft_p99_s=0.2, tpt_p50_s=0.01,
+                       tpt_p99_s=0.02, makespan_s=1.0, steps=3,
+                       n_migrations=0, migrated_bytes=0, wall_s=0.5)
+    m = rep.metrics()
+    assert list(m) == sorted(m)
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: hybrid windowed-delta identity through escalation
+# ---------------------------------------------------------------------------
+
+def test_hybrid_windowed_class_stats_identity():
+    """Two identical traffic windows on a LIVE HybridSim — with packet
+    escalation firing in each — yield bitwise-identical per-class
+    ``class_stats(since=)`` deltas: escalation stitches finish times,
+    never the byte accounting, and integer byte sums subtract exactly."""
+    torus = Torus((8,))
+    hy = make_sim(torus, fidelity="hybrid")
+    assert isinstance(hy, HybridSim)
+    nb = 2 << 20
+
+    def window():
+        before = hy.class_stats()
+        for s, d in ((0, 3), (0, 2), (1, 3)):
+            hy.inject(s, d, nb, cls=B)
+        hy.inject(5, 7, 1 << 18, cls=D)
+        hy.run()
+        assert hy.last_escalation is not None          # packet tier fired
+        return hy.class_stats(since=before)
+
+    d1, d2 = window(), window()
+    assert d1 == d2                                    # bitwise, per class
+    assert d1[B] == 3.0 * nb * 1.0 * len(torus.route(0, 3)[:-1]) \
+        or d1[B] > 0.0                                 # sanity: non-vacuous
+
+
+def test_hybrid_escalation_telemetry_counters():
+    torus = Torus((8,))
+    tel = Telemetry()
+    hy = make_sim(torus, fidelity="hybrid")
+    hy.telemetry = tel
+    for s, d in ((0, 3), (0, 2), (1, 3)):
+        hy.inject(s, d, 2 << 20, cls=B)
+    hy.run()
+    assert hy.last_escalation is not None
+    assert tel.value("fabric.escalations") == 1.0
+    assert tel.value("fabric.escalated_flows") >= 2.0
+    assert any(name == "escalation" for _ts, track, name, _d, _a
+               in tel.events_snapshot() if track == ("hybrid",))
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: probes and snapshots are telemetry ghosts
+# ---------------------------------------------------------------------------
+
+def _ghost_view(tel):
+    """Everything a probe must NOT move: every counter except the
+    ``fabric.probes`` stamp itself, plus the full event ring."""
+    counters = {k: v for k, v in tel.counters.items()
+                if k[0] != "fabric.probes"}
+    return counters, tel.events_snapshot(), tel.n_events
+
+
+@pytest.mark.parametrize("fidelity", ["packet", "fluid"])
+def test_probe_leaves_counters_and_ring_untouched(fidelity):
+    torus = Torus((8,))
+    probed, control = Telemetry(), Telemetry()
+    sp = make_sim(torus, fidelity=fidelity, qos=QosPolicy())
+    sc = make_sim(torus, fidelity=fidelity, qos=QosPolicy())
+    _drive(sp, probed)
+    _drive(sc, control)
+    route = tuple(torus.route(0, 3))
+    t1 = sp.probe_route(route, 1 << 20)
+    t2 = sp.probe_route(route, 1 << 20)
+    assert t1 == t2
+    # the ONE counter a probe moves is its own stamp, AFTER rollback
+    assert probed.value("fabric.probes") == 2.0
+    assert control.value("fabric.probes") == 0.0
+    assert _ghost_view(probed) == _ghost_view(control)
+
+
+def test_snapshot_restore_leaves_telemetry_untouched():
+    torus = Torus((8,))
+    tel = Telemetry()
+    sim = FabricSim(torus, qos=QosPolicy(), telemetry=tel)
+    for s, d, nb in FLOWS:
+        sim.inject(s, d, nb, cls=B)
+    sim.run()
+    before = (dict(tel.counters), tel.events_snapshot(), tel.n_events)
+    snap = sim._snapshot()
+    sim._restore(snap)
+    assert (dict(tel.counters), tel.events_snapshot(),
+            tel.n_events) == before
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = configs.get_reduced("smollm-135m")
+    return cfg, api.get_model(cfg).init(jax.random.key(0))
+
+
+def test_fault_epoch_stamped_exactly_once(dense_model):
+    cfg, params = dense_model
+    tel = Telemetry()
+    cl = ServingCluster(cfg, params, torus=Torus((4,)), node_ranks=(0, 1),
+                        max_batch=2, max_seq=64, page_tokens=8,
+                        telemetry=tel)
+    assert cl.sim.telemetry is tel                     # threaded through
+    cl.fail_link(0, 1)
+    assert tel.value("fabric.fault_epochs") == 1.0
+    cl.clear_faults()
+    assert tel.value("fabric.fault_epochs") == 2.0
+    names = [name for _ts, track, name, _d, _a in tel.events_snapshot()
+             if track == ("cluster",)]
+    assert names.count("fail_link") == 1
+    assert names.count("clear_faults") == 1
+
+
+# ---------------------------------------------------------------------------
+# perfetto export
+# ---------------------------------------------------------------------------
+
+def _traced_sim():
+    tel = Telemetry()
+    sim = make_sim(Torus((8,)), fidelity="packet", qos=QosPolicy())
+    _drive(sim, tel)
+    tel.collect(sim)
+    return tel
+
+
+def test_perfetto_schema_and_byte_determinism():
+    blob1 = _traced_sim().to_perfetto()
+    blob2 = _traced_sim().to_perfetto()
+    assert blob1 == blob2                              # byte-identical
+    obj = json.loads(blob1)
+    assert validate_perfetto(obj) == []
+    evs = obj["traceEvents"]
+    # one thread_name metadata row per track, spans carry ts+dur in us
+    tids = {e["tid"] for e in evs if e["ph"] in ("X", "i")}
+    named = {e["tid"] for e in evs if e["ph"] == "M"}
+    assert tids <= named
+    assert any(e["ph"] == "X" and e["dur"] > 0 for e in evs)
+
+
+def test_validate_perfetto_flags_violations():
+    assert validate_perfetto([]) != []                 # not a dict
+    assert validate_perfetto({"traceEvents": 3}) != []
+    bad = {"traceEvents": [{"ph": "X", "pid": 0, "tid": 0,
+                            "name": "x", "ts": 1.0}]}  # missing dur
+    assert validate_perfetto(bad) != []
+    orphan = {"traceEvents": [{"ph": "X", "pid": 0, "tid": 9, "name": "x",
+                               "ts": 1.0, "dur": 1.0}]}
+    assert any("thread_name" in e for e in validate_perfetto(orphan))
+
+
+def test_summary_table_mentions_hot_counters():
+    tel = _traced_sim()
+    table = tel.summary_table()
+    assert "busiest links" in table and "events:" in table
+    assert "link.busy_s@" in table
+
+
+# ---------------------------------------------------------------------------
+# endpoint + controller instrumentation
+# ---------------------------------------------------------------------------
+
+def test_rdma_put_counters_and_span():
+    torus = Torus((4, 4))
+    tel = Telemetry()
+    sim = FabricSim(torus, telemetry=tel)
+    ep = RdmaEndpoint(torus, 0, sim=sim, telemetry=tel)
+    region = ep.register(64 << 10)
+    ep.put_pages(5, region, list(range(4)), page_nbytes=16 << 10)
+    assert tel.value("rdma.puts") == 1.0
+    assert tel.value("rdma.put_bytes") == 64 << 10
+    assert tel.value("rdma.descriptors") == \
+        ep.last_put_report["descriptors"]
+    assert any(track == ("rdma", 0) for _ts, track, _n, _d, _a
+               in tel.events_snapshot())
+
+
+def test_qos_controller_window_telemetry():
+    from repro.core.fabric.qosctl import QosController, QosCtlPolicy
+
+    class _Slo:
+        token_target_s = 0.050
+        headroom = 0.8
+
+    tel = Telemetry()
+    torus = Torus((4,))
+    sim = FluidSim(torus, qos=QosPolicy())
+    ctl = QosController(QosPolicy(), _Slo(), policy=QosCtlPolicy(),
+                        telemetry=tel)
+    sim.inject(0, 2, 1 << 20, cls=B)
+    sim.run()
+    ctl.window(sim, [0.2, 0.2, 0.2])                   # way past target
+    assert tel.value("qosctl.windows") == 1.0
+    assert tel.value("qosctl.retunes") == ctl.n_retunes
+    assert any(track == ("controller",) for _ts, track, _n, _d, _a
+               in tel.events_snapshot())
